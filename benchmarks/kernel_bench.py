@@ -1,0 +1,62 @@
+"""Kernel micro-benchmarks (CPU timings are indicative only; the Pallas
+kernels target TPU and are validated in interpret mode)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench(verbose: bool = True):
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import mha_reference
+    from repro.kernels.ssd.ref import ssd_naive
+    from repro.models.ssm import ssd_scan
+
+    rows = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    B, S, Hq, Hkv, D = 1, 1024, 8, 2, 64
+    q = jax.random.normal(ks[0], (B, S, Hq, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+
+    f_ref = jax.jit(lambda q, k, v: mha_reference(q, k, v, causal=True))
+    f_fl = jax.jit(lambda q, k, v: flash_attention(q, k, v, True, 0, 256,
+                                                   256, "jnp"))
+    t_ref = _time(f_ref, q, k, v)
+    t_fl = _time(f_fl, q, k, v)
+    rows.append({"name": "attn_naive_1k", "us_per_call": t_ref,
+                 "derived": "materialised scores"})
+    rows.append({"name": "attn_flash_jnp_1k", "us_per_call": t_fl,
+                 "derived": f"{t_ref / t_fl:.2f}x vs naive (CPU)"})
+
+    H, P, G, N = 8, 64, 1, 64
+    x = jax.random.normal(ks[0], (1, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (1, S, G, N)) * 0.5
+    Cm = jax.random.normal(ks[4], (1, S, G, N)) * 0.5
+    s_naive = jax.jit(lambda *a: ssd_naive(*a))
+    s_chunk = jax.jit(lambda *a: ssd_scan(*a, chunk=128))
+    t_n = _time(s_naive, x, dt, A, Bm, Cm)
+    t_c = _time(s_chunk, x, dt, A, Bm, Cm)
+    rows.append({"name": "ssd_naive_1k", "us_per_call": t_n,
+                 "derived": "O(S^2) semiseparable"})
+    rows.append({"name": "ssd_chunked_1k", "us_per_call": t_c,
+                 "derived": f"{t_n / t_c:.2f}x vs naive (CPU)"})
+    if verbose:
+        for r in rows:
+            print(f"[kernel] {r['name']}: {r['us_per_call']:.0f}us "
+                  f"{r['derived']}")
+    return rows

@@ -1,0 +1,63 @@
+"""Benchmark harness: one function per paper table + framework benches.
+
+Prints ``name,us_per_call,derived`` CSV rows (stdout also carries the
+human-readable lines each bench emits).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    rows = []
+
+    # ---- paper tables I-IV (the reproduction) -------------------------- #
+    from benchmarks import paper_tables as pt
+    for name, fn in pt.ALL_TABLES.items():
+        t0 = time.perf_counter()
+        res = fn(verbose=True)
+        dt = (time.perf_counter() - t0) * 1e6
+        if name == "table1":
+            derived = (f"speedup_host={res['speedup_vs_host']:.2f}"
+                       f"(paper1.56) vm={res['speedup_vs_vm']:.2f}(1.73)")
+        elif name == "table2":
+            derived = (f"faster={res['faster_than_seq_pct']:.0f}%"
+                       f"(paper~33%) makespan={res['makespan_h']:.2f}h(4.48)")
+        elif name == "table3":
+            derived = (f"app1={res['app1_h']:.2f}h(2.88) "
+                       f"app2={res['app2_h']:.2f}h(3.50)")
+        else:
+            derived = (f"speedup1={res['speedup_app1']:.2f}(3.5) "
+                       f"speedup2={res['speedup_app2']:.2f}(3.3)")
+        rows.append({"name": f"paper_{name}", "us_per_call": dt,
+                     "derived": derived})
+
+    # ---- framework benches --------------------------------------------- #
+    from benchmarks import kernel_bench, scheduler_bench, swarm_bench
+    rows += swarm_bench.bench()
+    rows += scheduler_bench.bench()
+    rows += kernel_bench.bench()
+
+    # ---- roofline summary (if dry-run artifacts exist) ------------------ #
+    try:
+        from repro.launch.roofline import load_cells
+        cells = load_cells("artifacts/dryrun", "16x16")
+        if cells:
+            worst = min(cells, key=lambda c: c.roofline_fraction)
+            med = sorted(c.roofline_fraction for c in cells)[len(cells) // 2]
+            rows.append({
+                "name": "roofline_summary", "us_per_call": 0.0,
+                "derived": (f"{len(cells)} cells; median_frac={med:.3f}; "
+                            f"worst={worst.arch}/{worst.shape}="
+                            f"{worst.roofline_fraction:.3f}")})
+    except Exception as e:  # noqa: BLE001
+        print(f"(roofline summary skipped: {e})", file=sys.stderr)
+
+    print("\nname,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")
+
+
+if __name__ == "__main__":
+    main()

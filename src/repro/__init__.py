@@ -1,0 +1,7 @@
+"""repro: P2P torrent-like application/weight distribution for multi-pod JAX.
+
+Reproduction of Soelistio (2015) volunteer-computing distribution model,
+extended into a TPU-v5e-targeted training/inference framework.  See
+DESIGN.md for the architecture and EXPERIMENTS.md for results.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,4 @@
+from repro.checkpoint.store import (  # noqa: F401
+    CheckpointStore,
+    async_save,
+)

@@ -1,0 +1,4 @@
+from repro.cluster.heartbeat import HeartbeatMonitor, MemberState  # noqa: F401
+from repro.cluster.coordinator import JobCoordinator, WorkItem  # noqa: F401
+from repro.cluster.sdc import SDCValidator  # noqa: F401
+from repro.cluster.elastic import ElasticPlan, plan_resize  # noqa: F401

@@ -1,0 +1,378 @@
+"""Volunteer agent (paper §III.E-G, Figs. 3-5).
+
+Modules: connector (RECV, SEND), tracker (EVAL, DIST, STAT, VAL, TAIL) and
+worker (REQ, SCAN, RUN, TIME, COLLECT, SAVE, LOAD, STOP) — the paper's 15
+agent procedures.  Every agent is simultaneously:
+
+  * a SEEDER for its own applications (A_self): answers REQ with app+data,
+    validates RESULTs by m_min-way majority voting, reports status via STAT;
+  * a LEECHER for other hosts' applications: REQ -> SCAN+RUN -> TIME ->
+    COLLECT+LOAD -> SEND result, in a loop until the host runs dry.
+
+The dual Seed/ and Leech/ working directories (Fig. 3) are managed by
+core.directory; TAIL's volunteer log lives under Seed/App/<id>/Data/Tracker
+and TIME's under Leech/App/<id>/Data/Time, as in the paper.
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+
+from repro.core import directory as dirs
+from repro.core.messages import (APP_DATA, APP_LIST, BYE, DROP_APP, NO_WORK,
+                                 PING, PONG, REGISTER, REQ, RESULT,
+                                 RESULT_ACK, STATUS, AppInfo, Msg)
+from repro.core.metrics import AppMetrics
+from repro.core.runtime import Node, Runtime
+from repro.core.validation import majority_vote
+from repro.core.workunit import Application, LeaseTable, Part
+
+
+@dataclass
+class AgentConfig:
+    work_timeout_s: float = 60.0        # TAIL timeout parameter
+    status_interval_s: float = 1.0
+    retry_s: float = 2.0                # back-off after NO_WORK from a host
+    # per-cycle protocol/VM overhead in simulation (calibrated from the
+    # paper's Scenario I: w_parallel 6.35s vs sequential-VM 5.51s)
+    cycle_overhead_s: float = 0.0
+    accept_from: tuple = ()             # RECV accept/deny parameter
+    deny_from: tuple = ()
+    max_parallel_apps: int = 2          # leech this many apps concurrently
+    self_leech: bool = False            # hosts also crunch their own apps
+    root_dir: Optional[str] = None      # enables on-disk Fig. 3 layout
+
+
+class Agent(Node):
+    def __init__(self, node_id: str, server_id: str = "server",
+                 config: Optional[AgentConfig] = None,
+                 val_hook: Optional[Callable[[int, Any], bool]] = None):
+        self.node_id = node_id
+        self.server_id = server_id
+        self.cfg = config or AgentConfig()
+        self.val_hook = val_hook
+        # --- seeder state -------------------------------------------------
+        self.apps: Dict[str, Application] = {}         # A_self
+        self.tail = LeaseTable(self.cfg.work_timeout_s)
+        self.tails: Dict[str, LeaseTable] = {}
+        self.metrics: Dict[str, AppMetrics] = {}
+        # --- leecher state ------------------------------------------------
+        self.app_list: List[AppInfo] = []
+        self.current: Dict[str, dict] = {}             # app_id -> work ctx
+        self.results_log: List[tuple] = []
+        self.completed_cycles: Dict[str, int] = collections.defaultdict(int)
+        self.leech_time: Dict[str, float] = collections.defaultdict(float)
+        self.leech_bytes: Dict[str, float] = collections.defaultdict(float)
+        self.stopped_apps: Set[str] = set()
+        self.dry_until: Dict[str, float] = {}
+        self.completed_at: Dict[str, float] = {}
+        self.dir = (dirs.AgentDirs(self.cfg.root_dir, node_id)
+                    if self.cfg.root_dir else None)
+
+    # ------------------------------------------------------------------ #
+    def host_app(self, app: Application) -> None:
+        app.host_id = self.node_id
+        self.apps[app.app_id] = app
+        self.tails[app.app_id] = LeaseTable(self.cfg.work_timeout_s)
+        m = AppMetrics(d_app_bytes=app.app_bytes, m_min=app.m_min)
+        self.metrics[app.app_id] = m
+        if self.dir:
+            self.dir.seed_app(app.app_id, app.app_bytes)
+
+    def start(self, rt: Runtime) -> None:
+        super().start(rt)
+        self.SEND(self.server_id, Msg(REGISTER, self.node_id,
+                                      {"apps": self._self_rows()}))
+        rt.set_timer(self.node_id, "status", self.cfg.status_interval_s,
+                     periodic=True)
+        rt.set_timer(self.node_id, "tail", self.cfg.work_timeout_s / 2,
+                     periodic=True)
+
+    def _self_rows(self) -> List[AppInfo]:
+        rows = []
+        for app in self.apps.values():
+            m = self.metrics[app.app_id]
+            rows.append(AppInfo(app.app_id, self.node_id, d=m.d, p=m.p,
+                                w=m.w, n_parts=len(app.parts),
+                                parts_remaining=sum(
+                                    0 if p.done else 1 for p in app.parts)))
+        return rows
+
+    # ========================== connector =============================== #
+    def RECV(self, msg: Msg) -> None:
+        """Receive messages; accept/deny lists are the paper's parameter."""
+        if self.cfg.accept_from and msg.src not in self.cfg.accept_from \
+                and msg.src != self.server_id:
+            return
+        if msg.src in self.cfg.deny_from:
+            return
+        kind = msg.kind
+        if kind == PING:
+            self.SEND(self.server_id, Msg(PONG, self.node_id, size_bytes=64))
+        elif kind == APP_LIST:
+            self._on_app_list(msg.payload["apps"])
+        elif kind == DROP_APP:
+            for app_id in msg.payload["app_ids"]:
+                self.STOP(app_id, reason="host dropped from list")
+        elif kind == REQ:
+            self.DIST(msg.src, msg.payload["app_id"])
+        elif kind == APP_DATA:
+            self._on_app_data(msg)
+        elif kind == NO_WORK:
+            app_id = msg.payload["app_id"]
+            self.current.pop(app_id, None)
+            # back off: the host may only be out of *leasable* parts right
+            # now (all leased, not all validated) — retry later
+            self.dry_until[app_id] = self.rt.now() + self.cfg.retry_s
+            self.rt.set_timer(self.node_id, "retry", self.cfg.retry_s)
+            self._maybe_start_work()
+        elif kind == RESULT:
+            self.VAL(msg)
+        elif kind == RESULT_ACK:
+            self._on_result_ack(msg)
+
+    def SEND(self, dst: str, msg: Msg) -> None:
+        self.rt.send(dst, msg)
+
+    # =========================== tracker ================================ #
+    def EVAL(self, app_id: str, valid: bool) -> None:
+        """Track m_min/m_max progress for an application's validation."""
+        app = self.apps.get(app_id)
+        if app is None:
+            return
+        if valid and app.m_min < app.m_max:
+            app.m_min += 1
+            self.metrics[app_id].m_min = app.m_min
+
+    def DIST(self, volunteer: str, app_id: str) -> None:
+        """Lease the next pending part to `volunteer` and ship app+data."""
+        app = self.apps.get(app_id)
+        if app is None:
+            self.SEND(volunteer, Msg(NO_WORK, self.node_id,
+                                     {"app_id": app_id}, size_bytes=64))
+            return
+        tail = self.tails[app_id]
+        pending = app.pending_parts(tail.active())
+        if not pending:
+            self.SEND(volunteer, Msg(NO_WORK, self.node_id,
+                                     {"app_id": app_id}, size_bytes=64))
+            return
+        part = pending[0]
+        tail.grant(part.part_id, volunteer, self.rt.now())
+        if self.dir:
+            self.dir.tracker_log(app_id,
+                                 f"{self.rt.now():.3f} lease part="
+                                 f"{part.part_id} to={volunteer}")
+        self.SEND(volunteer, Msg(
+            APP_DATA, self.node_id,
+            {"app_id": app_id, "part_id": part.part_id,
+             "payload": part.payload, "app_bytes": app.app_bytes,
+             "data_bytes": part.data_bytes},
+            size_bytes=app.app_bytes + part.data_bytes))
+
+    def STAT(self) -> None:
+        """Update validated-work status (incl. d, w) to the server."""
+        self.SEND(self.server_id, Msg(STATUS, self.node_id,
+                                      {"apps": self._self_rows()}))
+
+    def VAL(self, msg: Msg) -> None:
+        """Validate a RESULT by majority voting once m_min results arrived."""
+        app_id = msg.payload["app_id"]
+        app = self.apps.get(app_id)
+        if app is None:
+            return
+        part_id = msg.payload["part_id"]
+        part = app.parts[part_id]
+        tail = self.tails[app_id]
+        tail.release(part_id, msg.src)
+        if self.val_hook is not None and not self.val_hook(
+                part_id, msg.payload["result"]):
+            # malicious result: discard; status not updated (paper §III.D)
+            self.SEND(msg.src, Msg(RESULT_ACK, self.node_id,
+                                   {"app_id": app_id, "part_id": part_id,
+                                    "valid": False}, size_bytes=64))
+            return
+        part.results.append((msg.src, msg.payload["result"],
+                             msg.payload.get("time_s", 0.0)))
+        if len(part.results) >= app.m_min and not part.done:
+            winner, ok = majority_vote([r for _, r, _ in part.results],
+                                       quorum=app.m_min)
+            if ok:
+                part.done = True
+                m = self.metrics[app_id]
+                m.record_cycle(msg.payload.get("data_bytes", part.data_bytes),
+                               msg.payload.get("time_s", 0.0))
+                self.EVAL(app_id, True)
+                if self.dir:
+                    self.dir.save_seed_result(app_id, part_id, winner)
+                if app.done and app_id not in self.completed_at:
+                    self.completed_at[app_id] = self.rt.now()
+                self.STAT()
+        self.SEND(msg.src, Msg(RESULT_ACK, self.node_id,
+                               {"app_id": app_id, "part_id": part_id,
+                                "valid": True}, size_bytes=64))
+
+    def TAIL(self) -> None:
+        """Expire overdue leases and re-DIST (straggler mitigation)."""
+        now = self.rt.now()
+        for app_id, tail in self.tails.items():
+            for lease in tail.expired(now):
+                tail.release(lease.part_id, lease.volunteer_id)
+                if self.dir:
+                    self.dir.tracker_log(app_id,
+                                         f"{now:.3f} timeout part="
+                                         f"{lease.part_id} "
+                                         f"volunteer={lease.volunteer_id}")
+                # the paper drops the volunteer from the mapping list and
+                # redistributes on the next REQ; nothing else to do here
+
+    # ============================ worker ================================ #
+    def REQ(self, app_id: str, host_id: str) -> None:
+        """Request application + next data part from the host."""
+        self.current.setdefault(app_id, {"host": host_id, "busy": False})
+        self.SEND(host_id, Msg(REQ, self.node_id, {"app_id": app_id},
+                               size_bytes=96))
+
+    def SCAN(self, payload: dict) -> int:
+        """Measure the size of the received application and data."""
+        return int(payload.get("app_bytes", 0)) + int(
+            payload.get("data_bytes", 0))
+
+    def RUN(self, app_id: str, part_id: int, payload: Any,
+            host_id: str) -> None:
+        """Execute one part; TIME marks start/end via the runtime."""
+        ctx = self.current.get(app_id)
+        if ctx is None:
+            return
+        ctx["busy"] = True
+        row = self._row_for(app_id)
+        sim_dur = None
+        fn = None
+        app = None
+        for a in self.app_list:
+            if a.app_id == app_id:
+                app = a
+        # resolve executable: hosts ship cost/run fns out-of-band in this
+        # in-process transport (a real deployment ships code in APP_DATA)
+        host_app = self._resolve_app(app_id, host_id)
+        if host_app is not None:
+            if host_app.cost_fn is not None:
+                # work units at reference speed 1.0; the runtime's processor-
+                # sharing executor applies node speed and contention
+                sim_dur = host_app.cost_fn(payload, 1.0) \
+                    + self.cfg.cycle_overhead_s
+            if host_app.run_fn is not None:
+                fn = (lambda p=payload, f=host_app.run_fn: f(p))
+        tag = (app_id, part_id, host_id)
+        self.TIME(app_id, "start")
+        self.rt.submit_work(self.node_id, tag, fn, sim_duration_s=sim_dur)
+
+    def _resolve_app(self, app_id: str, host_id: str) -> Optional[Application]:
+        host = getattr(self.rt, "nodes", {}).get(host_id)
+        if host is not None and hasattr(host, "apps"):
+            return host.apps.get(app_id)
+        return None
+
+    def TIME(self, app_id: str, mark: str) -> None:
+        """Track working time; log kept under Leech/App/Data/Time (Fig. 3)."""
+        if self.dir:
+            self.dir.time_log(app_id, f"{self.rt.now():.3f} {mark}")
+
+    def COLLECT(self, app_id: str, elapsed_s: float, nbytes: int) -> dict:
+        """Gather TIME and SCAN info about a finished part."""
+        self.leech_time[app_id] += elapsed_s
+        self.leech_bytes[app_id] += nbytes
+        self.completed_cycles[app_id] += 1
+        return {"time_s": elapsed_s, "data_bytes": nbytes}
+
+    def SAVE(self, app_id: str, part_id: int, result: Any) -> None:
+        if self.dir:
+            self.dir.save_leech_result(app_id, part_id, result)
+
+    def LOAD(self, app_id: str, part_id: int) -> Any:
+        if self.dir:
+            return self.dir.load_leech_result(app_id, part_id)
+        return None
+
+    def STOP(self, app_id: str, reason: str = "") -> None:
+        """Drop an application: its data, results and pending work."""
+        self.current.pop(app_id, None)
+        self.stopped_apps.add(app_id)
+        self.app_list = [a for a in self.app_list if a.app_id != app_id]
+        if self.dir:
+            self.dir.drop_leech_app(app_id)
+        self._maybe_start_work()
+
+    # ------------------------------------------------------------------ #
+    def _row_for(self, app_id: str) -> Optional[AppInfo]:
+        for a in self.app_list:
+            if a.app_id == app_id:
+                return a
+        return None
+
+    def _on_app_list(self, rows: List[AppInfo]) -> None:
+        self.app_list = [r for r in rows if r.app_id not in self.stopped_apps]
+        self._maybe_start_work()
+
+    def _maybe_start_work(self) -> None:
+        active = len(self.current)
+        now = self.rt.now()
+        for row in self.app_list:
+            if active >= self.cfg.max_parallel_apps:
+                break
+            if row.host_id == self.node_id and not self.cfg.self_leech:
+                continue
+            if row.app_id in self.current:
+                continue
+            if row.parts_remaining == 0 and row.p > 0:
+                continue    # host reported it complete
+            if self.dry_until.get(row.app_id, -1.0) > now:
+                continue    # backing off after NO_WORK
+            self.REQ(row.app_id, row.host_id)
+            active += 1
+
+    def _on_app_data(self, msg: Msg) -> None:
+        app_id = msg.payload["app_id"]
+        ctx = self.current.get(app_id)
+        if ctx is None or ctx.get("busy"):
+            return
+        nbytes = self.SCAN(msg.payload)
+        ctx["bytes"] = nbytes
+        self.RUN(app_id, msg.payload["part_id"], msg.payload["payload"],
+                 msg.src)
+
+    def on_work_done(self, tag, result, elapsed_s: float) -> None:
+        app_id, part_id, host_id = tag
+        self.TIME(app_id, "end")
+        ctx = self.current.get(app_id)
+        if ctx is None:
+            return      # STOPped while running
+        ctx["busy"] = False
+        info = self.COLLECT(app_id, elapsed_s, ctx.get("bytes", 0))
+        self.SAVE(app_id, part_id, result)
+        loaded = self.LOAD(app_id, part_id)
+        self.SEND(host_id, Msg(RESULT, self.node_id, {
+            "app_id": app_id, "part_id": part_id,
+            "result": loaded if loaded is not None else result,
+            "time_s": info["time_s"], "data_bytes": info["data_bytes"],
+        }, size_bytes=1024))
+        self.results_log.append((self.rt.now(), app_id, part_id))
+
+    def _on_result_ack(self, msg: Msg) -> None:
+        app_id = msg.payload["app_id"]
+        if app_id in self.current:
+            # keep leeching the same app until the host runs dry
+            self.REQ(app_id, msg.src)
+
+    def on_message(self, msg: Msg) -> None:
+        self.RECV(msg)
+
+    def on_timer(self, name: str) -> None:
+        if name == "status":
+            if self.apps:
+                self.STAT()
+        elif name == "tail":
+            self.TAIL()
+        elif name == "retry":
+            self._maybe_start_work()

@@ -1,0 +1,73 @@
+"""Agent working-directory layout (paper §III.F, Fig. 3).
+
+  <root>/<agent>/
+    Seed/App/<app_id>/app.bin
+    Seed/App/<app_id>/Data/Tracker        # TAIL's volunteer/lease log
+    Seed/App/<app_id>/Result/<part>.res
+    Leech/App/<app_id>/Data/Time          # TIME's working-time log
+    Leech/App/<app_id>/Result/<part>.res  # temporary, dropped by STOP
+
+All leech content is temporary: once an application finishes (or the host
+vanishes), STOP removes the whole Leech/App/<app_id> subtree.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Optional
+
+
+class AgentDirs:
+    def __init__(self, root: str, agent_id: str):
+        self.base = os.path.join(root, agent_id)
+        os.makedirs(os.path.join(self.base, "Seed", "App"), exist_ok=True)
+        os.makedirs(os.path.join(self.base, "Leech", "App"), exist_ok=True)
+
+    # ---- seed side -------------------------------------------------------
+    def seed_app(self, app_id: str, app_bytes: int) -> str:
+        d = os.path.join(self.base, "Seed", "App", app_id)
+        os.makedirs(os.path.join(d, "Data"), exist_ok=True)
+        os.makedirs(os.path.join(d, "Result"), exist_ok=True)
+        with open(os.path.join(d, "app.bin"), "wb") as f:
+            f.write(b"\0" * min(app_bytes, 1 << 16))
+        return d
+
+    def tracker_log(self, app_id: str, line: str) -> None:
+        d = os.path.join(self.base, "Seed", "App", app_id, "Data")
+        os.makedirs(d, exist_ok=True)
+        with open(os.path.join(d, "Tracker"), "a") as f:
+            f.write(line + "\n")
+
+    def save_seed_result(self, app_id: str, part_id: int, result: Any) -> None:
+        d = os.path.join(self.base, "Seed", "App", app_id, "Result")
+        os.makedirs(d, exist_ok=True)
+        with open(os.path.join(d, f"{part_id}.res"), "w") as f:
+            json.dump(result, f)
+
+    # ---- leech side ------------------------------------------------------
+    def time_log(self, app_id: str, line: str) -> None:
+        d = os.path.join(self.base, "Leech", "App", app_id, "Data")
+        os.makedirs(d, exist_ok=True)
+        with open(os.path.join(d, "Time"), "a") as f:
+            f.write(line + "\n")
+
+    def save_leech_result(self, app_id: str, part_id: int, result: Any
+                          ) -> None:
+        d = os.path.join(self.base, "Leech", "App", app_id, "Result")
+        os.makedirs(d, exist_ok=True)
+        with open(os.path.join(d, f"{part_id}.res"), "w") as f:
+            json.dump(result, f)
+
+    def load_leech_result(self, app_id: str, part_id: int) -> Optional[Any]:
+        p = os.path.join(self.base, "Leech", "App", app_id, "Result",
+                         f"{part_id}.res")
+        if not os.path.exists(p):
+            return None
+        with open(p) as f:
+            return json.load(f)
+
+    def drop_leech_app(self, app_id: str) -> None:
+        d = os.path.join(self.base, "Leech", "App", app_id)
+        if os.path.isdir(d):
+            shutil.rmtree(d, ignore_errors=True)

@@ -1,0 +1,42 @@
+"""Wire messages of the tracker/agent protocol (paper Figs. 1, 2, 4, 5)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+
+@dataclass
+class AppInfo:
+    """One row of the tracker's applications list."""
+    app_id: str
+    host_id: str
+    d: float = 0.0
+    p: float = 0.0
+    w: float = 0.0
+    n_parts: int = 0
+    parts_remaining: int = 0
+    updated_at: float = 0.0            # tracker timestamp (liveness)
+    extra_hosts: Tuple[str, ...] = ()  # mirroring extension (paper §V)
+
+
+@dataclass
+class Msg:
+    kind: str
+    src: str
+    payload: Dict[str, Any] = field(default_factory=dict)
+    size_bytes: int = 256              # protocol overhead default
+
+
+# message kinds
+REGISTER = "REGISTER"          # agent -> server: list[AppInfo] of A_self
+APP_LIST = "APP_LIST"          # server -> agent: full applications list
+PING = "PING"                  # server -> agent availability check
+PONG = "PONG"                  # agent -> server
+STATUS = "STATUS"              # agent -> server: validated work + (d, w)
+REQ = "REQ"                    # leecher -> host: request app + next part
+APP_DATA = "APP_DATA"          # host -> leecher: app file + part payload
+NO_WORK = "NO_WORK"            # host -> leecher: nothing left
+RESULT = "RESULT"              # leecher -> host: R + measured (d, w)
+RESULT_ACK = "RESULT_ACK"      # host -> leecher: valid / invalid
+DROP_APP = "DROP_APP"          # server -> agents: A removed from list
+BYE = "BYE"                    # agent -> server: clean leave

@@ -1,0 +1,301 @@
+"""Execution runtimes for the tracker/agent protocol.
+
+Two interchangeable runtimes drive the same Node code:
+
+  * SimRuntime    — deterministic discrete-event simulation on a virtual
+                    clock.  Work durations come from each application's
+                    cost_fn and per-node speed factors; message latency from a
+                    simple base+bytes/bw model.  Used to reproduce the paper's
+                    Tables I-IV at full scale in milliseconds of wall time.
+  * ThreadRuntime — a real-time event loop (dispatcher thread + worker pool).
+                    RUN executes the actual application function (the prime
+                    search really runs).  Used by examples and integration
+                    tests at reduced scale.
+
+Nodes are event-driven: the runtime calls ``on_message`` and ``on_timer``.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.messages import Msg
+
+
+class Node:
+    node_id: str = "?"
+
+    def start(self, rt: "Runtime") -> None:
+        self.rt = rt
+
+    def on_message(self, msg: Msg) -> None:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def on_timer(self, name: str) -> None:
+        pass
+
+    def on_work_done(self, tag: Any, result: Any, elapsed_s: float) -> None:
+        pass
+
+
+@dataclass
+class LinkModel:
+    base_latency_s: float = 0.002
+    bandwidth_Bps: float = 100e6 / 8 * 0.9   # ~100BASE-TX payload rate
+
+    def latency(self, size_bytes: int) -> float:
+        return self.base_latency_s + size_bytes / self.bandwidth_Bps
+
+
+class Runtime:
+    def now(self) -> float:
+        raise NotImplementedError
+
+    def send(self, dst: str, msg: Msg) -> None:
+        raise NotImplementedError
+
+    def set_timer(self, node_id: str, name: str, delay_s: float,
+                  periodic: bool = False) -> None:
+        raise NotImplementedError
+
+    def cancel_timer(self, node_id: str, name: str) -> None:
+        raise NotImplementedError
+
+    def submit_work(self, node_id: str, tag: Any, fn: Callable[[], Any],
+                    sim_duration_s: Optional[float] = None) -> None:
+        raise NotImplementedError
+
+
+# --------------------------------------------------------------------------- #
+class SimRuntime(Runtime):
+    """Deterministic discrete-event simulator."""
+
+    def __init__(self, link: Optional[LinkModel] = None):
+        self.nodes: Dict[str, Node] = {}
+        self.link = link or LinkModel()
+        self._t = 0.0
+        self._seq = itertools.count()
+        self._heap: List[Tuple[float, int, Callable[[], None]]] = []
+        self._cancelled: set = set()
+        self.speed: Dict[str, float] = {}
+        # processor-sharing executor state (per node): jobs share the core,
+        # like the paper's clients running two app processes on one-core VMs
+        self._ps_jobs: Dict[str, Dict[int, list]] = {}
+        self._ps_last: Dict[str, float] = {}
+        self._ps_event: Dict[str, int] = {}
+
+    def add_node(self, node: Node, speed: float = 1.0) -> None:
+        self.nodes[node.node_id] = node
+        self.speed[node.node_id] = speed
+        node.start(self)
+
+    def now(self) -> float:
+        return self._t
+
+    def _at(self, t: float, fn: Callable[[], None]) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), fn))
+
+    def send(self, dst: str, msg: Msg) -> None:
+        lat = self.link.latency(msg.size_bytes)
+        self._at(self._t + lat, lambda: self._deliver(dst, msg))
+
+    def _deliver(self, dst: str, msg: Msg) -> None:
+        node = self.nodes.get(dst)
+        if node is not None:
+            node.on_message(msg)
+
+    def set_timer(self, node_id: str, name: str, delay_s: float,
+                  periodic: bool = False) -> None:
+        key = (node_id, name)
+        self._cancelled.discard(key)
+
+        def fire():
+            if key in self._cancelled:
+                return
+            node = self.nodes.get(node_id)
+            if node is None:
+                return
+            node.on_timer(name)
+            if periodic and key not in self._cancelled:
+                self._at(self._t + delay_s, fire)
+
+        self._at(self._t + delay_s, fire)
+
+    def cancel_timer(self, node_id: str, name: str) -> None:
+        self._cancelled.add((node_id, name))
+
+    # ---- processor-sharing work executor ------------------------------ #
+    def _ps_advance(self, node_id: str) -> None:
+        jobs = self._ps_jobs.setdefault(node_id, {})
+        last = self._ps_last.get(node_id, self._t)
+        if jobs and self._t > last:
+            rate = self.speed.get(node_id, 1.0) / len(jobs)
+            dt = self._t - last
+            for j in jobs.values():
+                j[0] -= dt * rate          # remaining work units
+        self._ps_last[node_id] = self._t
+
+    def _ps_schedule(self, node_id: str) -> None:
+        jobs = self._ps_jobs.get(node_id, {})
+        token = next(self._seq)
+        self._ps_event[node_id] = token
+        if not jobs:
+            return
+        rate = self.speed.get(node_id, 1.0) / len(jobs)
+        jid, job = min(jobs.items(), key=lambda kv: kv[1][0])
+        eta = self._t + max(job[0], 0.0) / rate
+
+        def fire(tok=token, nid=node_id):
+            if self._ps_event.get(nid) != tok:
+                return                      # superseded by a newer event
+            self._ps_advance(nid)
+            jobs = self._ps_jobs.get(nid, {})
+            done = [k for k, j in jobs.items() if j[0] <= 1e-9]
+            for k in done:
+                work, tag, fn, t0 = jobs.pop(k)
+                node = self.nodes.get(nid)
+                if node is not None:
+                    result = fn() if fn is not None else None
+                    node.on_work_done(tag, result, self._t - t0)
+            self._ps_schedule(nid)
+
+        self._at(eta, fire)
+
+    def submit_work(self, node_id: str, tag: Any, fn: Callable[[], Any],
+                    sim_duration_s: Optional[float] = None) -> None:
+        """Processor sharing: concurrent jobs on a node split its core, like
+        the paper's clients running one process per leeched application."""
+        dur = sim_duration_s if sim_duration_s is not None else 0.0
+        self._ps_advance(node_id)
+        jid = next(self._seq)
+        # [remaining_work_units, tag, fn, started_at]
+        self._ps_jobs.setdefault(node_id, {})[jid] = [dur, tag, fn, self._t]
+        self._ps_schedule(node_id)
+
+    def run(self, until: Optional[float] = None,
+            stop_when: Optional[Callable[[], bool]] = None,
+            max_events: int = 50_000_000) -> float:
+        n = 0
+        while self._heap and n < max_events:
+            t, _, fn = self._heap[0]
+            if until is not None and t > until:
+                break
+            heapq.heappop(self._heap)
+            self._t = t
+            fn()
+            n += 1
+            if stop_when is not None and n % 64 == 0 and stop_when():
+                break
+        return self._t
+
+
+# --------------------------------------------------------------------------- #
+class ThreadRuntime(Runtime):
+    """Real-time event loop: one dispatcher thread + a worker pool."""
+
+    def __init__(self, n_workers: int = 4):
+        self.nodes: Dict[str, Node] = {}
+        self._q: "queue.Queue" = queue.Queue()
+        self._timers: List[Tuple[float, int, str, str, float, bool]] = []
+        self._timer_lock = threading.Lock()
+        self._cancelled: set = set()
+        self._seq = itertools.count()
+        self._stop = threading.Event()
+        self._work_q: "queue.Queue" = queue.Queue()
+        self._threads: List[threading.Thread] = []
+        self.n_workers = n_workers
+        self._t0 = time.monotonic()
+
+    def add_node(self, node: Node, speed: float = 1.0) -> None:
+        self.nodes[node.node_id] = node
+        node.start(self)
+
+    def now(self) -> float:
+        return time.monotonic() - self._t0
+
+    def send(self, dst: str, msg: Msg) -> None:
+        self._q.put(("msg", dst, msg))
+
+    def set_timer(self, node_id: str, name: str, delay_s: float,
+                  periodic: bool = False) -> None:
+        key = (node_id, name)
+        with self._timer_lock:
+            self._cancelled.discard(key)
+            heapq.heappush(self._timers,
+                           (self.now() + delay_s, next(self._seq), node_id,
+                            name, delay_s, periodic))
+
+    def cancel_timer(self, node_id: str, name: str) -> None:
+        with self._timer_lock:
+            self._cancelled.add((node_id, name))
+
+    def submit_work(self, node_id: str, tag: Any, fn: Callable[[], Any],
+                    sim_duration_s: Optional[float] = None) -> None:
+        self._work_q.put((node_id, tag, fn))
+
+    # -- loop --------------------------------------------------------------
+    def _worker(self):
+        while not self._stop.is_set():
+            try:
+                node_id, tag, fn = self._work_q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            t0 = self.now()
+            result = fn() if fn is not None else None
+            self._q.put(("done", node_id, (tag, result, self.now() - t0)))
+
+    def _dispatch(self):
+        while not self._stop.is_set():
+            # fire due timers
+            now = self.now()
+            fired = []
+            with self._timer_lock:
+                while self._timers and self._timers[0][0] <= now:
+                    t, _, nid, name, delay, periodic = heapq.heappop(
+                        self._timers)
+                    if (nid, name) in self._cancelled:
+                        continue
+                    fired.append((nid, name))
+                    if periodic:
+                        heapq.heappush(self._timers,
+                                       (now + delay, next(self._seq), nid,
+                                        name, delay, periodic))
+            for nid, name in fired:
+                node = self.nodes.get(nid)
+                if node:
+                    node.on_timer(name)
+            try:
+                kind, dst, data = self._q.get(timeout=0.01)
+            except queue.Empty:
+                continue
+            node = self.nodes.get(dst)
+            if node is None:
+                continue
+            if kind == "msg":
+                node.on_message(data)
+            else:
+                tag, result, dt = data
+                node.on_work_done(tag, result, dt)
+
+    def run(self, until_s: float = 30.0,
+            stop_when: Optional[Callable[[], bool]] = None) -> None:
+        for _ in range(self.n_workers):
+            th = threading.Thread(target=self._worker, daemon=True)
+            th.start()
+            self._threads.append(th)
+        disp = threading.Thread(target=self._dispatch, daemon=True)
+        disp.start()
+        self._threads.append(disp)
+        deadline = time.monotonic() + until_s
+        while time.monotonic() < deadline:
+            if stop_when is not None and stop_when():
+                break
+            time.sleep(0.02)
+        self._stop.set()
+        for th in self._threads:
+            th.join(timeout=1.0)

@@ -1,0 +1,156 @@
+"""Tracking server (paper §III.C-E, Fig. 2).
+
+Three modules:
+  * connection module  — procedures PING, PUSH, RECV
+  * tracker module     — procedures VAL, INIT, INFO
+  * synchronizer       — procedures WRITE, READ
+
+The server holds ONLY the applications list (AppInfo rows) and the member
+set; application payloads never transit it — that is the point of the
+paper's torrent-like design, and why the same server scales as the
+framework's multi-pod job coordinator (cluster/coordinator.py).
+
+Liveness (§III.D): a host's rows survive only while the host keeps updating
+within `t` seconds, for at most `f` missed checks; after that the rows are
+dropped and a DROP_APP notice fans out so leechers STOP dependent work.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Set
+
+from repro.core.messages import (APP_LIST, BYE, DROP_APP, PING, PONG,
+                                 REGISTER, STATUS, AppInfo, Msg)
+from repro.core.runtime import Node, Runtime
+
+
+@dataclass
+class TrackerConfig:
+    ping_interval_s: float = 2.0        # t
+    max_missed: int = 3                 # f
+    push_interval_s: float = 1.0        # INIT's refresh timer
+    blocked: tuple = ()                 # RECV blocklist parameter
+
+
+class TrackerServer(Node):
+    def __init__(self, node_id: str = "server",
+                 config: Optional[TrackerConfig] = None,
+                 val_hook: Optional[Callable[[str, Msg], bool]] = None):
+        self.node_id = node_id
+        self.cfg = config or TrackerConfig()
+        self.val_hook = val_hook            # VAL customisation point (§III.G)
+        # synchronizer state
+        self.app_list: Dict[str, AppInfo] = {}
+        self.members: Set[str] = set()
+        self.missed: Dict[str, int] = {}
+        self.blocklist: Set[str] = set(self.cfg.blocked)
+        self._init_cache: List[AppInfo] = []
+        self._init_cache_at: float = -1e9
+        self.log: List[tuple] = []
+
+    # ------------------------------------------------------------------ #
+    def start(self, rt: Runtime) -> None:
+        super().start(rt)
+        rt.set_timer(self.node_id, "ping", self.cfg.ping_interval_s,
+                     periodic=True)
+
+    # ======================= connection module ========================= #
+    def PING(self) -> None:
+        """Availability check with (t, f) semantics (§III.D, §III.G)."""
+        now = self.rt.now()
+        for member in list(self.members):
+            self.missed[member] = self.missed.get(member, 0) + 1
+            self.rt.send(member, Msg(PING, self.node_id,
+                                     {"at": now}, size_bytes=64))
+            if self.missed[member] > self.cfg.max_missed:
+                self.VAL(member, None, alive=False)
+
+    def PUSH(self, dst: Optional[str] = None) -> None:
+        """Send the applications list to one volunteer (or broadcast)."""
+        rows = self.READ()
+        targets = [dst] if dst else list(self.members)
+        for t in targets:
+            self.rt.send(t, Msg(APP_LIST, self.node_id,
+                                {"apps": rows},
+                                size_bytes=256 + 64 * len(rows)))
+
+    def RECV(self, msg: Msg) -> None:
+        """Collect volunteer messages; honours the blocklist parameter."""
+        if msg.src in self.blocklist:
+            return
+        self.log.append((self.rt.now(), msg.kind, msg.src))
+        if msg.kind == PONG:
+            self.missed[msg.src] = 0
+        elif msg.kind == REGISTER:
+            self.members.add(msg.src)
+            self.missed[msg.src] = 0
+            self.VAL(msg.src, msg, alive=True)
+            self.INIT(msg.src)
+        elif msg.kind == STATUS:
+            self.VAL(msg.src, msg, alive=True)
+        elif msg.kind == BYE:
+            self.VAL(msg.src, msg, alive=False)
+
+    # ========================= tracker module ========================== #
+    def VAL(self, member: str, msg: Optional[Msg], alive: bool) -> None:
+        """Validate host availability/updates; calls INFO on changes.
+
+        Can be customised with `val_hook` (e.g. blacklist low-availability
+        clients, §III.G)."""
+        if self.val_hook is not None and msg is not None:
+            if not self.val_hook(member, msg):
+                self.blocklist.add(member)
+                alive = False
+        if not alive:
+            self.INFO("drop_host", member)
+            return
+        self.missed[member] = 0
+        if msg is not None and msg.kind in (REGISTER, STATUS):
+            for row in msg.payload.get("apps", []):
+                self.INFO("upsert", row)
+
+    def INIT(self, member: str) -> None:
+        """Push an initial applications list to a new volunteer.  Keeps a
+        periodically refreshed cache (§III.G)."""
+        now = self.rt.now()
+        if now - self._init_cache_at > self.cfg.push_interval_s:
+            self._init_cache = self.READ()
+            self._init_cache_at = now
+        self.rt.send(member, Msg(APP_LIST, self.node_id,
+                                 {"apps": list(self._init_cache)},
+                                 size_bytes=256 + 64 * len(self._init_cache)))
+
+    def INFO(self, change: str, data) -> None:
+        """Forward availability/update changes to the synchronizer."""
+        if change == "upsert":
+            self.WRITE(data)
+        elif change == "drop_host":
+            dropped = [a for a in self.app_list.values()
+                       if a.host_id == data]
+            self.members.discard(data)
+            for row in dropped:
+                del self.app_list[row.app_id]
+            if dropped:
+                note = Msg(DROP_APP, self.node_id,
+                           {"app_ids": [r.app_id for r in dropped]},
+                           size_bytes=128)
+                for m in self.members:
+                    self.rt.send(m, note)
+
+    # ======================= synchronizer module ======================= #
+    def WRITE(self, row: AppInfo) -> None:
+        row.updated_at = self.rt.now()
+        self.app_list[row.app_id] = row
+
+    def READ(self) -> List[AppInfo]:
+        return list(self.app_list.values())
+
+    # ------------------------------------------------------------------ #
+    def on_message(self, msg: Msg) -> None:
+        self.RECV(msg)
+
+    def on_timer(self, name: str) -> None:
+        if name == "ping":
+            self.PING()
+            self.PUSH()

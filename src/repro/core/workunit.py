@@ -1,0 +1,147 @@
+"""Applications, parts and leases.
+
+An Application is split into parts ("cycles" in the paper's tests); the host
+leases parts to leechers, tracks them via TAIL, and re-DISTs on timeout.
+Leases are also the framework's unit of data-pipeline fault tolerance.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+
+@dataclass
+class Part:
+    part_id: int
+    payload: Any                         # e.g. (lo, hi) range for primes
+    data_bytes: int = 4096
+    done: bool = False
+    results: List[Tuple[str, Any, float]] = field(default_factory=list)
+    # (volunteer_id, result, time_s) — for m_min-way majority voting
+
+
+@dataclass
+class Application:
+    app_id: str
+    host_id: str
+    run_fn: Optional[Callable[[Any], Any]] = None   # real execution
+    cost_fn: Optional[Callable[[Any, float], float]] = None  # sim: (payload, speed)->s
+    app_bytes: int = 4096
+    parts: List[Part] = field(default_factory=list)
+    m_min: int = 1
+    m_max: int = 1
+
+    def pending_parts(self, leased: Dict[int, list]) -> List[Part]:
+        out = []
+        for part in self.parts:
+            if part.done:
+                continue
+            active = len(leased.get(part.part_id, []))
+            needed = self.m_min - len(part.results) - active
+            if needed > 0:
+                out.append(part)
+        return out
+
+    @property
+    def done(self) -> bool:
+        return all(p.done for p in self.parts)
+
+    @property
+    def total_data_bytes(self) -> int:
+        return sum(p.data_bytes for p in self.parts)
+
+
+@dataclass
+class Lease:
+    part_id: int
+    volunteer_id: str
+    issued_at: float
+    deadline: float
+
+
+class LeaseTable:
+    """TAIL's bookkeeping: part -> outstanding leases, with timeouts."""
+
+    def __init__(self, timeout_s: float):
+        self.timeout_s = timeout_s
+        self.by_part: Dict[int, List[Lease]] = {}
+
+    def grant(self, part_id: int, volunteer_id: str, now: float) -> Lease:
+        lease = Lease(part_id, volunteer_id, now, now + self.timeout_s)
+        self.by_part.setdefault(part_id, []).append(lease)
+        return lease
+
+    def release(self, part_id: int, volunteer_id: str) -> bool:
+        ls = self.by_part.get(part_id, [])
+        for i, l in enumerate(ls):
+            if l.volunteer_id == volunteer_id:
+                ls.pop(i)
+                return True
+        return False
+
+    def expired(self, now: float) -> List[Lease]:
+        out = []
+        for ls in self.by_part.values():
+            out.extend(l for l in ls if l.deadline <= now)
+        return out
+
+    def drop_volunteer(self, volunteer_id: str) -> List[int]:
+        """Drop all leases of a volunteer; returns affected part ids."""
+        parts = []
+        for pid, ls in self.by_part.items():
+            n0 = len(ls)
+            ls[:] = [l for l in ls if l.volunteer_id != volunteer_id]
+            if len(ls) != n0:
+                parts.append(pid)
+        return parts
+
+    def active(self) -> Dict[int, list]:
+        return {pid: ls for pid, ls in self.by_part.items() if ls}
+
+
+def make_prime_app(app_id: str, host_id: str, lo: int, hi: int,
+                   n_parts: int, *, app_bytes: int = 4096,
+                   part_data_bytes: int = 4096, m_min: int = 1,
+                   sim_time_per_number: float = 2.5e-3) -> Application:
+    """The paper's test application: prime search by exhaustion."""
+    bounds = []
+    step = (hi - lo) / n_parts
+    for i in range(n_parts):
+        a = int(lo + i * step)
+        b = int(lo + (i + 1) * step) if i < n_parts - 1 else hi
+        bounds.append((a, b))
+
+    def run_fn(payload):
+        a, b = payload
+        return find_primes(a, b)
+
+    def cost_fn(payload, speed):
+        a, b = payload
+        return (b - a) * sim_time_per_number / speed
+
+    parts = [Part(i, bounds[i], data_bytes=part_data_bytes)
+             for i in range(n_parts)]
+    return Application(app_id, host_id, run_fn=run_fn, cost_fn=cost_fn,
+                       app_bytes=app_bytes, parts=parts, m_min=m_min,
+                       m_max=max(m_min, 1))
+
+
+def find_primes(lo: int, hi: int) -> list:
+    """Exhaustion method, as in the paper's test application."""
+    out = []
+    for n in range(max(lo, 2), hi):
+        if n % 2 == 0:
+            if n == 2:
+                out.append(n)
+            continue
+        i = 3
+        prime = True
+        while i * i <= n:
+            if n % i == 0:
+                prime = False
+                break
+            i += 2
+        if prime:
+            out.append(n)
+    return out

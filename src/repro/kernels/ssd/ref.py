@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Mamba2 SSD kernel.
+
+`ssd_naive` is the O(S^2) quadratic form (direct semiseparable matmul) —
+slow but obviously correct; `repro.models.ssm.ssd_scan` is the chunked
+production implementation.  Both serve as references for the Pallas kernel.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_naive(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+              Cm: jax.Array, init_state: Optional[jax.Array] = None
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B,S,H,P); dt: (B,S,H); A: (H,); Bm/Cm: (B,S,G,N).
+
+    y[t] = sum_{s<=t} C_t . (prod_{r in (s,t]} exp(dtA_r)) dt_s x_s B_s
+    Returns (y, final_state)."""
+    Bsz, S, H, Pd = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2).astype(jnp.float32)    # (B,S,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=2).astype(jnp.float32)
+    dtA = dt.astype(jnp.float32) * A.astype(jnp.float32)    # (B,S,H)
+    cum = jnp.cumsum(dtA, axis=1)                           # (B,S,H)
+    # decay(s->t) = exp(cum[t]-cum[s]) for t >= s
+    dec = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (B,T,S,H)
+    tri = jnp.tril(jnp.ones((S, S), bool))[None, :, :, None]
+    dec = jnp.where(tri, dec, 0.0)
+    cb = jnp.einsum("bthn,bshn->btsh", Ch, Bh)
+    m = cb * dec
+    xdt = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+    y = jnp.einsum("btsh,bshp->bthp", m, xdt)
+    if init_state is not None:
+        dec0 = jnp.exp(cum)                                  # (B,S,H)
+        y = y + jnp.einsum("bshn,bhpn,bsh->bshp", Ch,
+                           init_state.astype(jnp.float32), dec0)
+    # final state
+    decT = jnp.exp(cum[:, -1:, :] - cum)                     # (B,S,H)
+    state = jnp.einsum("bshn,bsh,bshp->bhpn", Bh, decT, xdt)
+    if init_state is not None:
+        state = state + init_state.astype(jnp.float32) * \
+            jnp.exp(cum[:, -1])[:, :, None, None]
+    return y.astype(x.dtype), state

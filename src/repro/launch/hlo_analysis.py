@@ -1,0 +1,361 @@
+"""Trip-count-aware cost analysis of optimized HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` (scan) body exactly once,
+which under-reports a 48-layer scanned transformer by ~48x.  XLA:CPU attaches
+``backend_config={"known_trip_count":{"n":...}}`` to the while ops it derives
+static trip counts for, so this module re-derives flops / bytes / collective
+bytes by walking the computation call graph with multipliers:
+
+  ENTRY -(x1)-> fusion/call computations
+        -(x trip_count)-> while body/cond computations
+
+Reported numbers are *per device* (the HLO module is the per-device SPMD
+program).  Collective traffic is summed over operand bytes per collective
+kind, with `-start/-done` async pairs counted once.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "s2": 1, "u2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"?(\d+)"?\}')
+_CALL_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast", "ragged-all-to-all")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "negate", "abs", "compare",
+    "select", "and", "or", "xor", "convert", "floor", "ceil", "sign",
+    "cosine", "sine", "logistic", "expm1", "log1p", "atan2", "remainder",
+    "clamp",
+}
+
+
+def _type_bytes(type_str: str) -> int:
+    """Bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _type_elems(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dims = m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+class Instr:
+    __slots__ = ("name", "type", "op", "rest")
+
+    def __init__(self, name, type_, op, rest):
+        self.name, self.type, self.op, self.rest = name, type_, op, rest
+
+
+def parse_computations(hlo: str) -> Dict[str, List[Instr]]:
+    comps: Dict[str, List[Instr]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        if not line.startswith(" "):
+            stripped = line.strip()
+            m = _COMP_RE.match(stripped)
+            if m and stripped.endswith("{") and "=" not in stripped.split("(")[0]:
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            comps[cur].append(Instr(m.group(1), m.group(2), m.group(3),
+                                    m.group(4)))
+    return comps
+
+
+def _operand_names(rest: str) -> List[str]:
+    # operands are leading %names inside the first (...) — rest starts after '('
+    depth = 1
+    out = []
+    i = 0
+    while i < len(rest) and depth > 0:
+        c = rest[i]
+        if c == "(":
+            depth += 1
+        elif c == ")":
+            depth -= 1
+        elif c == "%":
+            j = i + 1
+            while j < len(rest) and (rest[j].isalnum() or rest[j] in "._-"):
+                j += 1
+            out.append(rest[i + 1:j])
+            i = j
+            continue
+        i += 1
+    return out
+
+
+def _update_bytes_of(root: Instr, callee_types: Dict[str, str]) -> float:
+    """Traffic of an in-place dynamic-update-slice: read+write of the slice,
+    not the whole (possibly 48-layer-stacked) buffer."""
+    ops_ = _operand_names(root.rest)
+    if len(ops_) > 1:
+        return 2.0 * _type_bytes(callee_types.get(ops_[1], ""))
+    return 0.0
+
+
+def _local_cost(instrs: List[Instr],
+                comps: Optional[Dict[str, List[Instr]]] = None) -> dict:
+    name2type = {i.name: i.type for i in instrs}
+    flops = 0.0
+    dot_flops = 0.0
+    bytes_acc = 0.0
+    coll = defaultdict(float)
+    coll_ops: List[dict] = []
+    calls: List[Tuple[str, float]] = []
+    for ins in instrs:
+        op = ins.op
+        if op in ("parameter", "constant", "get-tuple-element", "tuple",
+                  "bitcast", "after-all", "partition-id", "replica-id",
+                  "iota"):
+            continue
+        base = op[:-6] if op.endswith("-start") else op
+        if op.endswith("-done"):
+            continue
+        if base in COLLECTIVES:
+            ob = sum(_type_bytes(name2type.get(n, "")) for n in
+                     _operand_names(ins.rest))
+            out_b = _type_bytes(ins.type)
+            group = 0
+            mg = _GROUPS_IOTA_RE.search(ins.rest)
+            if mg:
+                group = int(mg.group(2))
+            else:
+                ml = _GROUPS_LIST_RE.search(ins.rest)
+                if ml and ml.group(1).strip():
+                    group = len(ml.group(1).split(","))
+            coll[base] += ob
+            coll_ops.append({"kind": base, "operand_bytes": ob,
+                             "out_bytes": out_b, "group": group})
+            bytes_acc += ob + out_b
+            continue
+        if op == "while":
+            m = _TRIP_RE.search(ins.rest)
+            trip = float(m.group(1)) if m else 1.0
+            for cm in _CALL_RE.finditer(ins.rest):
+                calls.append((cm.group(1), trip))
+            continue
+        if op == "conditional":
+            mb = _BRANCH_RE.search(ins.rest)
+            if mb:
+                for b in mb.group(1).split(","):
+                    calls.append((b.strip().lstrip("%"), 1.0))
+            for cm in _CALL_RE.finditer(ins.rest):
+                calls.append((cm.group(1), 1.0))
+            continue
+        if op in ("dynamic-slice",):
+            bytes_acc += 2.0 * _type_bytes(ins.type)
+            continue
+        if op in ("dynamic-update-slice",):
+            ops_ = _operand_names(ins.rest)
+            upd = _type_bytes(name2type.get(ops_[1], "")) if len(ops_) > 1 \
+                else 0
+            bytes_acc += 2.0 * upd
+            continue
+        if op in ("fusion", "call", "custom-call", "map", "reduce",
+                  "reduce-window", "sort", "scatter", "select-and-scatter"):
+            for cm in _CALL_RE.finditer(ins.rest):
+                calls.append((cm.group(1), 1.0))
+            handled = False
+            if op == "fusion" and comps is not None:
+                m = _CALL_RE.search(ins.rest)
+                callee = m.group(1) if m else None
+                body = comps.get(callee) or []
+                root = body[-1] if body else None
+                if root is not None and root.op in ("dynamic-update-slice",
+                                                    "scatter"):
+                    # in-place update fusion: traffic = slice read+write +
+                    # the non-aliased (small) operands
+                    callee_types = {i.name: i.type for i in body}
+                    upd = _update_bytes_of(root, callee_types)
+                    out_b = _type_bytes(ins.type)
+                    small = sum(
+                        b for b in (_type_bytes(name2type.get(n, ""))
+                                    for n in _operand_names(ins.rest))
+                        if b != out_b)
+                    bytes_acc += upd + small
+                    handled = True
+                elif root is not None and root.op == "dynamic-slice":
+                    bytes_acc += 2.0 * _type_bytes(ins.type)
+                    handled = True
+            if not handled:
+                ob = sum(_type_bytes(name2type.get(n, "")) for n in
+                         _operand_names(ins.rest))
+                bytes_acc += ob + _type_bytes(ins.type)
+            if op in ("reduce", "reduce-window"):
+                flops += sum(_type_elems(name2type.get(n, "")) for n in
+                             _operand_names(ins.rest))
+            continue
+        if op == "dot":
+            out_elems = _type_elems(ins.type)
+            ops_ = _operand_names(ins.rest)
+            k = 1
+            mc = _CONTRACT_RE.search(ins.rest)
+            if mc and ops_:
+                lhs_dims = _shape_dims(name2type.get(ops_[0], ""))
+                for di in (mc.group(1).split(",") if mc.group(1) else []):
+                    idx = int(di)
+                    if idx < len(lhs_dims):
+                        k *= lhs_dims[idx]
+            f = 2.0 * out_elems * k
+            flops += f
+            dot_flops += f
+            ob = sum(_type_bytes(name2type.get(n, "")) for n in ops_)
+            bytes_acc += ob + _type_bytes(ins.type)
+            continue
+        if op == "convolution":
+            # approximate: 2 * out_elems * (kernel elems / out-channels)
+            out_elems = _type_elems(ins.type)
+            ops_ = _operand_names(ins.rest)
+            kelems = _type_elems(name2type.get(ops_[1], "")) if len(ops_) > 1 \
+                else 1
+            odims = _shape_dims(ins.type)
+            och = odims[-1] if odims else 1
+            f = 2.0 * out_elems * max(kelems // max(och, 1), 1)
+            flops += f
+            dot_flops += f
+            ob = sum(_type_bytes(name2type.get(n, "")) for n in ops_)
+            bytes_acc += ob + _type_bytes(ins.type)
+            continue
+        # generic elementwise / data movement
+        ob = sum(_type_bytes(name2type.get(n, "")) for n in
+                 _operand_names(ins.rest))
+        bytes_acc += ob + _type_bytes(ins.type)
+        if op in _ELEMENTWISE:
+            flops += _type_elems(ins.type)
+    return {"flops": flops, "dot_flops": dot_flops, "bytes": bytes_acc,
+            "coll": dict(coll), "coll_ops": coll_ops, "calls": calls}
+
+
+def analyze_hlo(hlo: str, n_devices: int = 1) -> dict:
+    comps = parse_computations(hlo)
+    local = {name: _local_cost(instrs, comps) for name, instrs in
+             comps.items()}
+
+    # multipliers via DFS from ENTRY (the computation named in `ENTRY` line —
+    # detect as a computation not called by anyone, preferring 'main')
+    called = set()
+    for lc in local.values():
+        for callee, _ in lc["calls"]:
+            called.add(callee)
+    roots = [n for n in comps if n not in called]
+    entry = None
+    for r in roots:
+        if "main" in r:
+            entry = r
+            break
+    if entry is None and roots:
+        entry = max(roots, key=lambda n: len(comps[n]))
+
+    mult: Dict[str, float] = defaultdict(float)
+
+    def visit(name: str, m: float, depth=0):
+        if name not in local or depth > 64:
+            return
+        mult[name] += m
+        for callee, cm in local[name]["calls"]:
+            visit(callee, m * cm, depth + 1)
+
+    if entry:
+        visit(entry, 1.0)
+
+    flops = dot_flops = bytes_acc = 0.0
+    coll = defaultdict(float)
+    coll_ops_agg: Dict[tuple, dict] = {}
+    for name, m in mult.items():
+        lc = local[name]
+        flops += lc["flops"] * m
+        dot_flops += lc["dot_flops"] * m
+        bytes_acc += lc["bytes"] * m
+        for k, v in lc["coll"].items():
+            coll[k] += v * m
+        for op in lc["coll_ops"]:
+            key = (op["kind"], op["operand_bytes"], op["out_bytes"],
+                   op["group"])
+            e = coll_ops_agg.setdefault(key, dict(op, count=0.0))
+            e["count"] += m
+
+    total_coll = sum(coll.values())
+    return {
+        "flops": flops,
+        "dot_flops": dot_flops,
+        "bytes_accessed": bytes_acc,
+        "collective_bytes": total_coll,
+        "collectives": dict(coll),
+        "coll_ops": sorted(coll_ops_agg.values(),
+                           key=lambda e: -e["operand_bytes"] * e["count"]),
+        "n_computations": len(comps),
+        "entry": entry,
+        "n_devices": n_devices,
+    }
+
+
+def collective_link_bytes(coll_ops: List[dict]) -> float:
+    """Effective serialized bytes per device at link bandwidth, assuming
+    ring algorithms: all-reduce 2(R-1)/R x operand; all-gather (R-1)/R x
+    output; reduce-scatter / all-to-all (R-1)/R x operand; permute 1x."""
+    total = 0.0
+    for op in coll_ops:
+        r = max(op.get("group", 0), 1)
+        f = (r - 1) / r if r > 1 else 0.0
+        kind = op["kind"]
+        n = op.get("count", 1.0)
+        if kind == "all-reduce":
+            b = 2.0 * f * op["operand_bytes"]
+        elif kind == "all-gather":
+            b = f * max(op["out_bytes"], op["operand_bytes"])
+        elif kind in ("reduce-scatter", "all-to-all", "ragged-all-to-all"):
+            b = f * op["operand_bytes"]
+        elif kind == "collective-broadcast":
+            b = op["operand_bytes"]
+        else:  # collective-permute
+            b = op["operand_bytes"]
+        total += b * n
+    return total

@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+A TPU v5e pod is a 16x16 chip torus; multi-pod jobs add a leading ``pod``
+axis connected over DCN.  Functions, not module constants, so importing this
+module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (host) devices exist — for tests."""
+    n = len(jax.devices())
+    assert data * model <= n, (data, model, n)
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+HARDWARE = {
+    # TPU v5e, per chip
+    "peak_flops_bf16": 197e12,     # FLOP/s
+    "hbm_bandwidth": 819e9,        # B/s
+    "ici_link_bandwidth": 50e9,    # B/s per link (~ per direction)
+    "dcn_bandwidth": 25e9,         # B/s per host aggregate (cross-pod)
+    "hbm_bytes": 16e9,
+}

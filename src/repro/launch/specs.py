@@ -1,0 +1,117 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs`` returns the abstract argument tuple for the step function a
+given (arch, shape) cell lowers:
+
+  train_*    -> train_step(state, batch)
+  prefill_*  -> prefill_step(params, batch, caches)   caches zero-initialised
+  decode_*   -> decode_step(params, batch, caches)    caches at full length
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+from repro.models import model as M
+from repro.optim.adamw import AdamWConfig
+from repro.parallel.sharding import (DEFAULT_RULES, INFERENCE_RULES,
+                                     ShardingRules, infer_rules,
+                                     named_sharding, specs_to_abstract)
+from repro.training.train_state import train_state_specs
+
+
+def _sds(mesh, rules, shape, dtype, logical):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(
+        shape, dtype, sharding=named_sharding(mesh, shape, logical, rules))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh=None,
+                rules: Optional[ShardingRules] = None) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    rules = rules or (DEFAULT_RULES if shape.kind == "train"
+                      else infer_rules(cfg))
+    tok = lambda s: _sds(mesh, rules, s, jnp.int32, ("batch",) + (None,) * (len(s) - 1))
+    emb = lambda s: _sds(mesh, rules, s, cfg.act_dtype,
+                         ("batch", None, None))
+
+    if shape.kind == "train":
+        if cfg.is_encdec:
+            St = S // cfg.encdec_tgt_ratio
+            return {"enc_embeds": emb((B, S, cfg.d_model)),
+                    "tokens": tok((B, St)), "labels": tok((B, St))}
+        d = {"labels": tok((B, S))}
+        if cfg.input_kind == "embeds":
+            d["embeds"] = emb((B, S, cfg.d_model))
+        else:
+            d["tokens"] = tok((B, S))
+        if cfg.mrope:
+            d["positions"] = _sds(mesh, rules, (3, B, S), jnp.int32,
+                                  (None, "batch", None))
+        return d
+
+    if shape.kind == "prefill":
+        if cfg.is_encdec:
+            St = S // cfg.encdec_tgt_ratio
+            return {"enc_embeds": emb((B, S, cfg.d_model)),
+                    "tokens": tok((B, St))}
+        d = {}
+        if cfg.input_kind == "embeds":
+            d["embeds"] = emb((B, S, cfg.d_model))
+        else:
+            d["tokens"] = tok((B, S))
+        if cfg.mrope:
+            d["positions"] = _sds(mesh, rules, (3, B, S), jnp.int32,
+                                  (None, "batch", None))
+        return d
+
+    # decode: one new token against a cache of length S
+    d = {"tokens": tok((B, 1))}
+    if cfg.mrope:
+        d["positions"] = _sds(mesh, rules, (3, B, 1), jnp.int32,
+                              (None, "batch", None))
+    return d
+
+
+def cache_abstract(cfg: ModelConfig, shape: ShapeConfig, mesh=None,
+                   rules: Optional[ShardingRules] = None):
+    rules = rules or infer_rules(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "prefill":
+        # enc-dec: encoder sees S source frames; decoder prefix is S//ratio
+        cache_len = S // cfg.encdec_tgt_ratio if cfg.is_encdec else S
+        src = S
+    else:
+        # decode: self-cache of seq_len (per assignment); cross-KV to the
+        # S-frame source for enc-dec
+        cache_len, src = S, S
+    tree = M.cache_specs_tree(cfg, B, cache_len, src_len=src)
+    return specs_to_abstract(tree, mesh, rules)
+
+
+def state_abstract(cfg: ModelConfig, mesh=None,
+                   rules: ShardingRules = DEFAULT_RULES):
+    return specs_to_abstract(train_state_specs(cfg), mesh, rules)
+
+
+def params_abstract(cfg: ModelConfig, mesh=None,
+                    rules: Optional[ShardingRules] = None, dtype=None):
+    rules = rules or infer_rules(cfg)
+    return specs_to_abstract(M.model_param_specs(cfg), mesh, rules,
+                             dtype_override=dtype or cfg.act_dtype)
+
+
+def step_args_abstract(cfg: ModelConfig, shape: ShapeConfig, mesh=None
+                       ) -> Tuple:
+    """Full abstract argument tuple for the cell's step function."""
+    if shape.kind == "train":
+        return (state_abstract(cfg, mesh, DEFAULT_RULES),
+                batch_specs(cfg, shape, mesh, DEFAULT_RULES))
+    r = infer_rules(cfg)
+    return (params_abstract(cfg, mesh, r),
+            batch_specs(cfg, shape, mesh, r),
+            cache_abstract(cfg, shape, mesh, r))

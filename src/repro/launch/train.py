@@ -1,0 +1,55 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch granite-8b --reduced \
+      --steps 50 --batch 8 --seq 128 [--ckpt-dir ckpt/]
+
+``--reduced`` shrinks the architecture to a CPU-runnable width (same code
+path as production).  On a TPU slice, omit --reduced and pass --mesh to
+train the full config under the production sharding rules.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.base import get_config, reduced_config
+from repro.launch.mesh import make_production_mesh
+from repro.optim.adamw import AdamWConfig
+from repro.training.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--sdc-every", type=int, default=0)
+    ap.add_argument("--mesh", choices=["none", "pod", "multipod"],
+                    default="none")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_config(cfg)
+    mesh = None
+    if args.mesh != "none":
+        mesh = make_production_mesh(multi_pod=args.mesh == "multipod")
+
+    tc = TrainerConfig(batch=args.batch, seq=args.seq, steps=args.steps,
+                       ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,
+                       sdc_every=args.sdc_every)
+    tr = Trainer(cfg, AdamWConfig(lr=args.lr, warmup_steps=10,
+                                  total_steps=args.steps), tc, mesh=mesh)
+    tr.init()
+    hist = tr.run()
+    print(f"final loss: {hist[-1]['loss']:.4f} after {len(hist)} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,365 @@
+"""Model assembly: layer-group scan, parameter/cache spec trees, forward passes.
+
+The model is a sequence of layer groups (see configs.base); each group runs
+under ``jax.lax.scan`` with parameters (and KV/SSM caches) stacked on a leading
+repeat axis.  One code path serves all 10 assigned architectures.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GroupSpec, LayerSpec, ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.parallel.sharding import ParamSpec, shard_act, tree_map_specs
+
+
+# --------------------------------------------------------------------------- #
+# Param specs
+# --------------------------------------------------------------------------- #
+def layer_param_specs(cfg: ModelConfig, lspec: LayerSpec,
+                      decoder_cross: bool = False) -> dict:
+    d: Dict[str, Any] = {}
+    if lspec.mixer in ("attn", "attn_local"):
+        d["ln_mixer"] = L.norm_spec(cfg.d_model)
+        d["attn"] = attn_lib.attn_specs(cfg)
+    elif lspec.mixer == "ssd":
+        d["ln_mixer"] = L.norm_spec(cfg.d_model)
+        d["ssd"] = ssm_lib.ssd_specs(cfg)
+    if decoder_cross:
+        d["ln_cross"] = L.norm_spec(cfg.d_model)
+        d["cross"] = attn_lib.cross_attn_specs(cfg)
+    if lspec.mlp == "dense":
+        d["ln_mlp"] = L.norm_spec(cfg.d_model)
+        d["mlp"] = L.mlp_specs(cfg)
+    elif lspec.mlp == "moe":
+        d["ln_mlp"] = L.norm_spec(cfg.d_model)
+        d["moe"] = moe_lib.moe_specs(cfg)
+    return d
+
+
+def _stack(tree, repeat: int):
+    return tree_map_specs(
+        lambda s: ParamSpec((repeat,) + s.shape, (None,) + s.logical,
+                            s.dtype, s.init, s.scale), tree)
+
+
+def group_param_specs(cfg: ModelConfig, g: GroupSpec,
+                      decoder_cross: bool = False) -> dict:
+    per_layer = {f"L{p}": layer_param_specs(cfg, ls, decoder_cross)
+                 for p, ls in enumerate(g.layers)}
+    return _stack(per_layer, g.repeat)
+
+
+def shared_attn_specs(cfg: ModelConfig) -> dict:
+    sub = cfg.replace(num_heads=cfg.shared_attn_heads or cfg.num_heads,
+                      num_kv_heads=cfg.shared_attn_kv_heads or cfg.num_kv_heads)
+    return {"ln": L.norm_spec(cfg.d_model),
+            "attn": attn_lib.attn_specs(sub, heads=sub.num_heads,
+                                        kv_heads=sub.num_kv_heads)}
+
+
+def model_param_specs(cfg: ModelConfig) -> dict:
+    tree: Dict[str, Any] = {"embed": L.embed_specs(cfg)}
+    tree["decoder"] = {f"g{i}": group_param_specs(cfg, g, cfg.is_encdec)
+                       for i, g in enumerate(cfg.groups)}
+    if cfg.is_encdec:
+        tree["encoder"] = {f"g{i}": group_param_specs(cfg, g, False)
+                           for i, g in enumerate(cfg.encoder_groups)}
+        tree["encoder"]["enc_norm"] = L.norm_spec(cfg.d_model)
+    if any(ls.shared_attn for g in cfg.groups for ls in g.layers):
+        tree["shared_attn"] = shared_attn_specs(cfg)
+    return tree
+
+
+def count_params(cfg: ModelConfig, include_embed: bool = True,
+                 active_only: bool = False) -> int:
+    import numpy as np
+    tree = model_param_specs(cfg)
+    total = 0
+    for path, s in jax.tree_util.tree_flatten_with_path(
+            tree, is_leaf=lambda x: isinstance(x, ParamSpec))[0]:
+        keys = [getattr(k, "key", str(k)) for k in path]
+        n = int(np.prod(s.shape))
+        if not include_embed and ("embedding" in keys or "lm_head" in keys):
+            continue
+        if active_only and any("wi_gate" == k or "wi_up" == k or "wo" == k
+                               for k in keys) and "moe" in keys:
+            # routed experts: scale by activated fraction
+            n = n * max(cfg.experts_per_token, 1) // max(cfg.num_experts, 1)
+        total += n
+    return total
+
+
+# --------------------------------------------------------------------------- #
+# Cache specs
+# --------------------------------------------------------------------------- #
+def layer_cache_specs(cfg: ModelConfig, lspec: LayerSpec, batch: int,
+                      cache_len: int, src_len: int = 0,
+                      decoder_cross: bool = False) -> dict:
+    d: Dict[str, Any] = {}
+    if lspec.mixer == "attn":
+        d.update(attn_lib.cache_specs(cfg, batch, cache_len))
+    elif lspec.mixer == "attn_local":
+        d.update(attn_lib.cache_specs(cfg, batch,
+                                      min(cache_len, cfg.window_size)))
+    elif lspec.mixer == "ssd":
+        d.update(ssm_lib.ssd_cache_specs(cfg, batch))
+    if lspec.shared_attn:
+        kh = cfg.shared_attn_kv_heads or cfg.num_kv_heads
+        cs = attn_lib.cache_specs(cfg, batch, cache_len, kv_heads=kh)
+        d["shared_k"] = cs["k"]
+        d["shared_v"] = cs["v"]
+    if decoder_cross:
+        kh = cfg.num_kv_heads
+        d["cross_k"] = ParamSpec((batch, src_len, kh, cfg.head_dim),
+                                 ("batch", "kv_seq", "kv_heads", None),
+                                 dtype=cfg.act_dtype, init="zeros")
+        d["cross_v"] = d["cross_k"]
+    return d
+
+
+def cache_specs_tree(cfg: ModelConfig, batch: int, cache_len: int,
+                     src_len: int = 0) -> dict:
+    tree: Dict[str, Any] = {"decoder": {}}
+    for i, g in enumerate(cfg.groups):
+        per_layer = {f"L{p}": layer_cache_specs(cfg, ls, batch, cache_len,
+                                                src_len, cfg.is_encdec)
+                     for p, ls in enumerate(g.layers)}
+        tree["decoder"][f"g{i}"] = _stack(per_layer, g.repeat)
+    tree["index"] = ParamSpec((batch,), ("batch",), dtype=jnp.int32,
+                              init="zeros")
+    return tree
+
+
+# --------------------------------------------------------------------------- #
+# Forward
+# --------------------------------------------------------------------------- #
+def apply_layer(cfg: ModelConfig, lspec: LayerSpec, p: dict, x: jax.Array,
+                aux: jax.Array, *, shared_params=None, mode: str,
+                positions=None, cache=None, index=None, enc_kv=None,
+                causal: bool = True) -> Tuple[jax.Array, jax.Array, Optional[dict]]:
+    new_cache: Dict[str, Any] = {}
+    if lspec.mixer in ("attn", "attn_local"):
+        h = L.rms_norm(x, p["ln_mixer"], cfg.norm_eps)
+        sub_cache = ({"k": cache["k"], "v": cache["v"]}
+                     if cache and "k" in cache else None)
+        h, nc = attn_lib.attention_block(
+            p["attn"], h, cfg, local=(lspec.mixer == "attn_local"), mode=mode,
+            positions=positions, cache=sub_cache, index=index, causal=causal)
+        x = x + h
+        if nc:
+            new_cache.update(nc)
+    elif lspec.mixer == "ssd":
+        h = L.rms_norm(x, p["ln_mixer"], cfg.norm_eps)
+        sub_cache = ({k: cache[k] for k in ("ssm", "conv_x", "conv_b", "conv_c")}
+                     if cache and "ssm" in cache else None)
+        h, nc = ssm_lib.ssd_block(p["ssd"], h, cfg, mode=mode, cache=sub_cache)
+        x = x + h
+        if nc:
+            new_cache.update(nc)
+
+    if lspec.shared_attn and shared_params is not None:
+        h = L.rms_norm(x, shared_params["ln"], cfg.norm_eps)
+        scfg = cfg.replace(num_heads=cfg.shared_attn_heads or cfg.num_heads,
+                           num_kv_heads=cfg.shared_attn_kv_heads
+                           or cfg.num_kv_heads, qk_norm=False)
+        sub_cache = ({"k": cache["shared_k"], "v": cache["shared_v"]}
+                     if cache and "shared_k" in cache else None)
+        h, nc = attn_lib.attention_block(
+            shared_params["attn"], h, scfg, local=False, mode=mode,
+            positions=positions, cache=sub_cache, index=index)
+        x = x + h
+        if nc:
+            new_cache["shared_k"] = nc["k"]
+            new_cache["shared_v"] = nc["v"]
+
+    if enc_kv is not None and "cross" in p:
+        h = L.rms_norm(x, p["ln_cross"], cfg.norm_eps)
+        h = attn_lib.cross_attention_block(p["cross"], h, enc_kv, cfg)
+        x = x + h
+
+    if lspec.mlp == "dense":
+        h = L.rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+        x = x + L.mlp_apply(p["mlp"], h, tp_sp=cfg.tp_sp)
+    elif lspec.mlp == "moe":
+        h = L.rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+        h, a = moe_lib.moe_block(p["moe"], h, cfg)
+        x = x + h
+        aux = aux + a
+
+    return x, aux, (new_cache or None)
+
+
+def run_groups(cfg: ModelConfig, groups, params: dict, x: jax.Array, *,
+               mode: str, positions=None, caches=None, index=None,
+               shared_params=None, enc_out=None, causal: bool = True
+               ) -> Tuple[jax.Array, jax.Array, Optional[dict]]:
+    """Run all layer groups with per-group scan.  Returns (x, aux, caches)."""
+    aux0 = jnp.zeros((), jnp.float32)
+    new_caches: Dict[str, Any] = {}
+    total_aux = aux0
+
+    for gi, g in enumerate(groups):
+        gp = params[f"g{gi}"]
+        gc = caches[f"g{gi}"] if caches is not None else None
+
+        def body(carry, xs, _g=g):
+            x_, aux_ = carry
+            p_slice, c_slice = xs
+            new_c: Dict[str, Any] = {}
+            for pidx, ls in enumerate(_g.layers):
+                key = f"L{pidx}"
+                lp = p_slice[key]
+                lc = c_slice[key] if c_slice is not None else None
+                enc_kv = None
+                if enc_out is not None and "cross" in lp:
+                    if mode == "decode" and lc is not None and "cross_k" in lc:
+                        enc_kv = (lc["cross_k"], lc["cross_v"])
+                    else:
+                        enc_kv = attn_lib.encode_cross_kv(lp["cross"], enc_out,
+                                                          cfg)
+                x_, aux_, nc = apply_layer(
+                    cfg, ls, lp, x_, aux_, shared_params=shared_params,
+                    mode=mode, positions=positions, cache=lc, index=index,
+                    enc_kv=enc_kv, causal=causal)
+                if lc is not None:
+                    out_c = dict(nc or {})
+                    if "cross_k" in lc:
+                        if enc_kv is not None and mode == "prefill":
+                            out_c["cross_k"] = enc_kv[0].astype(
+                                lc["cross_k"].dtype)
+                            out_c["cross_v"] = enc_kv[1].astype(
+                                lc["cross_v"].dtype)
+                        elif "cross_k" not in out_c:
+                            out_c["cross_k"] = lc["cross_k"]
+                            out_c["cross_v"] = lc["cross_v"]
+                    # carry through untouched entries so ys matches xs
+                    for k in lc:
+                        if k not in out_c:
+                            out_c[k] = lc[k]
+                    new_c[key] = out_c
+                elif nc:
+                    new_c[key] = nc
+            return (x_, aux_), (new_c or None)
+
+        if mode == "train" and cfg.remat != "none":
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if cfg.remat == "dots" else None)
+            body = jax.checkpoint(body, policy=policy)
+
+        (x, total_aux), ys = jax.lax.scan(body, (x, total_aux), (gp, gc))
+        if ys is not None:
+            new_caches[f"g{gi}"] = ys
+
+    return x, total_aux, (new_caches or None)
+
+
+# --------------------------------------------------------------------------- #
+# Top-level entry points
+# --------------------------------------------------------------------------- #
+def _inputs_to_x(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    if "embeds" in batch:
+        x = batch["embeds"].astype(cfg.act_dtype)
+        return shard_act(x, "batch", "seq_act", None)
+    return L.embed_tokens(params["embed"], batch["tokens"], cfg)
+
+
+def _positions(cfg: ModelConfig, batch: dict, B: int, S: int,
+               index=None) -> jax.Array:
+    if "positions" in batch:
+        return batch["positions"]
+    if index is not None:
+        idx = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(index)), (B,))
+        pos = idx[:, None]
+    else:
+        pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    if cfg.mrope:
+        pos = jnp.broadcast_to(pos[None], (3,) + pos.shape)
+    return pos
+
+
+def encode(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    x = batch["enc_embeds"].astype(cfg.act_dtype)
+    x = shard_act(x, "batch", "seq_act", None)
+    B, S = x.shape[0], x.shape[1]
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x, _, _ = run_groups(cfg, cfg.encoder_groups, params["encoder"], x,
+                         mode="train", positions=pos, causal=False)
+    return L.rms_norm(x, params["encoder"]["enc_norm"], cfg.norm_eps)
+
+
+def forward(cfg: ModelConfig, params: dict, batch: dict, *,
+            mode: str = "train", caches=None, index=None
+            ) -> Tuple[jax.Array, jax.Array, Optional[dict]]:
+    """Returns (logits, aux_loss, new_caches)."""
+    x, aux, new_caches = backbone(cfg, params, batch, mode=mode,
+                                  caches=caches, index=index)
+    if mode == "prefill":
+        # only the last position's logits are needed to start decoding
+        x = x[:, -1:]
+    logits = L.lm_logits(params["embed"], x, cfg)
+    return logits, aux, new_caches
+
+
+def backbone(cfg: ModelConfig, params: dict, batch: dict, *,
+             mode: str = "train", caches=None, index=None):
+    """Everything up to (but excluding) the LM head."""
+    enc_out = None
+    if cfg.is_encdec:
+        if mode == "decode" and "enc_embeds" not in batch:
+            enc_out = None
+        else:
+            enc_out = encode(cfg, params, batch)
+        x = L.embed_tokens(params["embed"], batch["tokens"], cfg)
+        if enc_out is None:
+            enc_out = jnp.zeros((x.shape[0], 1, cfg.d_model), cfg.act_dtype)
+    else:
+        x = _inputs_to_x(cfg, params, batch)
+    B, S = x.shape[0], x.shape[1]
+    positions = _positions(cfg, batch, B, S, index if mode == "decode" else None)
+    shared = params.get("shared_attn")
+    dec_caches = caches["decoder"] if caches is not None else None
+    x, aux, new_dec = run_groups(cfg, cfg.groups, params["decoder"], x,
+                                 mode=mode, positions=positions,
+                                 caches=dec_caches, index=index,
+                                 shared_params=shared, enc_out=enc_out,
+                                 causal=True)
+    new_caches = None
+    if new_dec is not None:
+        if index is not None:   # decode: advance each sequence's position
+            idx = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(index)), (B,))
+            new_idx = (idx + S).astype(jnp.int32)
+        else:                    # prefill: every sequence sits at S
+            new_idx = jnp.full((B,), S, jnp.int32)
+        new_caches = {"decoder": new_dec, "index": new_idx}
+    return x, aux, new_caches
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict
+            ) -> Tuple[jax.Array, dict]:
+    x, aux, _ = backbone(cfg, params, batch, mode="train")
+    nll = L.lm_head_loss(params["embed"], x, batch["labels"], cfg,
+                         batch.get("loss_mask"))
+    loss = nll + cfg.router_aux_coef * aux
+    return loss, {"loss": loss, "nll": nll, "aux": aux}
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict, caches
+            ) -> Tuple[jax.Array, dict]:
+    logits, _, new_caches = forward(cfg, params, batch, mode="prefill",
+                                    caches=caches, index=None)
+    return logits[:, -1], new_caches
+
+
+def decode_step(cfg: ModelConfig, params: dict, batch: dict, caches
+                ) -> Tuple[jax.Array, dict]:
+    logits, _, new_caches = forward(cfg, params, batch, mode="decode",
+                                    caches=caches, index=caches["index"])
+    return logits[:, -1], new_caches

@@ -1,0 +1,10 @@
+"""Convenience re-exports for model construction."""
+from repro.models.model import (  # noqa: F401
+    cache_specs_tree,
+    count_params,
+    decode_step,
+    forward,
+    loss_fn,
+    model_param_specs,
+    prefill,
+)

@@ -1,0 +1,230 @@
+"""Mamba2 SSD (state-space duality) block — chunked, MXU-friendly formulation.
+
+Follows the SSD decomposition of arXiv:2405.21060: within chunks of length L the
+output is a masked (semiseparable) matmul; across chunks a tiny recurrence on
+the (H, P, N) state carries context.  This pure-jnp implementation doubles as
+the oracle for the Pallas kernel in ``repro/kernels/ssd``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rms_norm
+from repro.parallel.sharding import ParamSpec, shard_act
+
+
+def ssd_specs(cfg: ModelConfig) -> dict:
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, h, w = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_conv_width
+    return {
+        "wz": ParamSpec((d, di), ("embed", "ssm_inner")),
+        "wx": ParamSpec((d, di), ("embed", "ssm_inner")),
+        "wB": ParamSpec((d, g * n), ("embed", None)),
+        "wC": ParamSpec((d, g * n), ("embed", None)),
+        "wdt": ParamSpec((d, h), ("embed", "ssm_heads")),
+        "conv_x": ParamSpec((w, di), (None, "ssm_inner"), init="normal", scale=1.0),
+        "conv_B": ParamSpec((w, g * n), (None, None)),
+        "conv_C": ParamSpec((w, g * n), (None, None)),
+        "A_log": ParamSpec((h,), ("ssm_heads",), init="zeros"),
+        "D": ParamSpec((h,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamSpec((h,), ("ssm_heads",), init="zeros"),
+        "gate_norm": ParamSpec((di,), ("ssm_inner",), init="zeros"),
+        "wo": ParamSpec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv along seq.  x: (B,S,C); w: (W,C).
+
+    Returns (y, new_state) where state holds the last W-1 inputs.
+    """
+    W = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else xp[:, :0]
+    return jax.nn.silu(y), new_state
+
+
+def _segsum_exp(a_cs: jax.Array) -> jax.Array:
+    """exp(cumsum segment differences), lower-triangular.
+
+    a_cs: (..., L) inclusive cumsum of dtA.  Returns (..., L, L) with
+    out[..., i, j] = exp(a_cs[i] - a_cs[j]) for i >= j else 0.
+    """
+    L = a_cs.shape[-1]
+    diff = a_cs[..., :, None] - a_cs[..., None, :]
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(tri, jnp.exp(diff), 0.0)
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+             Cm: jax.Array, chunk: int,
+             init_state: Optional[jax.Array] = None
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD.  x: (B,S,H,P); dt: (B,S,H); A: (H,) (negative);
+    Bm/Cm: (B,S,G,N).  Returns (y: (B,S,H,P), final_state: (B,H,P,N))."""
+    Bsz, S, H, Pd = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nc = Sp // L
+    rep = H // G
+
+    # expand groups to per-head (all assigned configs use G == 1)
+    Bh = jnp.repeat(Bm, rep, axis=2)                      # (B,Sp,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+
+    xc = x.reshape(Bsz, nc, L, H, Pd)
+    dtc = dt.reshape(Bsz, nc, L, H).astype(jnp.float32)
+    Bc = Bh.reshape(Bsz, nc, L, H, N)
+    Cc = Ch.reshape(Bsz, nc, L, H, N)
+
+    dtA = dtc * A.astype(jnp.float32)                     # (B,nc,L,H)
+    a_cs = jnp.cumsum(dtA, axis=2)                        # inclusive cumsum
+    # decay from j to i within chunk (i >= j): exp(a_cs[i] - a_cs[j])
+    Lmat = _segsum_exp(jnp.transpose(a_cs, (0, 1, 3, 2)))  # (B,nc,H,L,L)
+
+    xdt = xc * dtc[..., None].astype(x.dtype)             # (B,nc,L,H,P)
+
+    # ---- intra-chunk (diagonal blocks) ----
+    cb = jnp.einsum("bclhn,bcshn->bchls", Cc, Bc)         # (B,nc,H,L,L)
+    m = cb.astype(jnp.float32) * Lmat
+    y_diag = jnp.einsum("bchls,bcshp->bclhp", m.astype(x.dtype), xdt)
+
+    # ---- chunk states ----
+    decay_to_end = jnp.exp(a_cs[:, :, -1:, :] - a_cs)     # (B,nc,L,H)
+    states = jnp.einsum("bclhn,bclh,bclhp->bchpn",
+                        Bc.astype(jnp.float32),
+                        decay_to_end,
+                        xdt.astype(jnp.float32))          # (B,nc,H,P,N)
+
+    # ---- inter-chunk recurrence ----
+    chunk_decay = jnp.exp(jnp.sum(dtA, axis=2))           # (B,nc,H)
+    s0 = (jnp.zeros((Bsz, H, Pd, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def rec(carry, inp):
+        st, dk = inp                                      # (B,H,P,N), (B,H)
+        new = carry * dk[..., None, None] + st
+        return new, carry                                 # emit state BEFORE chunk
+
+    final, prev_states = jax.lax.scan(
+        rec, s0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)         # (B,nc,H,P,N)
+
+    # ---- inter-chunk contribution ----
+    decay_from_start = jnp.exp(a_cs)                      # (B,nc,L,H)
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp",
+                       Cc.astype(jnp.float32), prev_states, decay_from_start)
+
+    y = y_diag.astype(jnp.float32) + y_off
+    y = y.reshape(Bsz, Sp, H, Pd)[:, :S]
+    return y.astype(x.dtype), final
+
+
+def ssd_block(params: dict, x: jax.Array, cfg: ModelConfig, *,
+              mode: str = "train", cache: Optional[dict] = None
+              ) -> Tuple[jax.Array, Optional[dict]]:
+    """Full Mamba2 block: proj -> conv -> SSD -> gated norm -> out proj."""
+    dt_ = x.dtype
+    B, S, _ = x.shape
+    H, Pd = cfg.ssm_nheads, cfg.ssm_head_dim
+    G, N = cfg.ssm_ngroups, cfg.ssm_state
+
+    z = jnp.einsum("bsd,de->bse", x, params["wz"].astype(dt_))
+    xs = jnp.einsum("bsd,de->bse", x, params["wx"].astype(dt_))
+    Bp = jnp.einsum("bsd,de->bse", x, params["wB"].astype(dt_))
+    Cp = jnp.einsum("bsd,de->bse", x, params["wC"].astype(dt_))
+    dtp = jnp.einsum("bsd,dh->bsh", x, params["wdt"].astype(dt_))
+    xs = shard_act(xs, "batch", None, "ssm_inner")
+    z = shard_act(z, "batch", None, "ssm_inner")
+
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dt_act = jax.nn.softplus(dtp.astype(jnp.float32)
+                             + params["dt_bias"].astype(jnp.float32))
+
+    if mode == "decode":
+        assert cache is not None and S == 1
+        xs, conv_x = _conv_step(xs, params["conv_x"], cache["conv_x"])
+        Bp, conv_b = _conv_step(Bp, params["conv_B"], cache["conv_b"])
+        Cp, conv_c = _conv_step(Cp, params["conv_C"], cache["conv_c"])
+        xh = xs.reshape(B, H, Pd)
+        Bb = jnp.repeat(Bp.reshape(B, G, N), H // G, axis=1)   # (B,H,N)
+        Cb = jnp.repeat(Cp.reshape(B, G, N), H // G, axis=1)
+        dt1 = dt_act[:, 0]                                 # (B,H)
+        dA = jnp.exp(dt1 * A)                              # (B,H)
+        st = cache["ssm"].astype(jnp.float32)
+        upd = jnp.einsum("bh,bhp,bhn->bhpn", dt1, xh.astype(jnp.float32),
+                         Bb.astype(jnp.float32))
+        st = st * dA[..., None, None] + upd
+        y = jnp.einsum("bhpn,bhn->bhp", st, Cb.astype(jnp.float32))
+        y = y + params["D"].astype(jnp.float32)[None, :, None] * \
+            xh.astype(jnp.float32)
+        y = y.reshape(B, 1, cfg.d_inner)
+        new_cache = {"ssm": st.astype(cache["ssm"].dtype), "conv_x": conv_x,
+                     "conv_b": conv_b, "conv_c": conv_c}
+    else:
+        xs, conv_x = _causal_conv(xs, params["conv_x"].astype(dt_))
+        Bp, conv_b = _causal_conv(Bp, params["conv_B"].astype(dt_))
+        Cp, conv_c = _causal_conv(Cp, params["conv_C"].astype(dt_))
+        xh = xs.reshape(B, S, H, Pd)
+        Bv = Bp.reshape(B, S, G, N)
+        Cv = Cp.reshape(B, S, G, N)
+        if cfg.use_pallas:
+            from repro.kernels.ssd.ops import ssd as ssd_op
+            y, fin = ssd_op(xh, dt_act, A, Bv, Cv, chunk=cfg.ssd_chunk)
+        else:
+            y, fin = ssd_scan(xh, dt_act, A, Bv, Cv, chunk=cfg.ssd_chunk)
+        y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh.astype(
+            y.dtype)
+        y = y.reshape(B, S, cfg.d_inner)
+        new_cache = None
+        if mode == "prefill" and cache is not None:
+            new_cache = {"ssm": fin.astype(cache["ssm"].dtype),
+                         "conv_x": conv_x.astype(cache["conv_x"].dtype),
+                         "conv_b": conv_b.astype(cache["conv_b"].dtype),
+                         "conv_c": conv_c.astype(cache["conv_c"].dtype)}
+
+    y = shard_act(y.astype(dt_), "batch", None, "ssm_inner")
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(dt_),
+                 params["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["wo"].astype(dt_))
+    return shard_act(out, "batch", "seq_act", None), new_cache
+
+
+def _conv_step(x1: jax.Array, w: jax.Array, state: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Single-token causal conv.  x1: (B,1,C); state: (B,W-1,C)."""
+    xp = jnp.concatenate([state.astype(x1.dtype), x1], axis=1)  # (B,W,C)
+    y = jnp.einsum("bwc,wc->bc", xp, w.astype(x1.dtype))[:, None]
+    return jax.nn.silu(y), xp[:, 1:].astype(state.dtype)
+
+
+def ssd_cache_specs(cfg: ModelConfig, batch: int) -> dict:
+    H, Pd, G, N, W = (cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_ngroups,
+                      cfg.ssm_state, cfg.ssm_conv_width)
+    return {
+        "ssm": ParamSpec((batch, H, Pd, N), ("batch", "ssm_heads", None, None),
+                         dtype=jnp.float32, init="zeros"),
+        "conv_x": ParamSpec((batch, W - 1, cfg.d_inner),
+                            ("batch", None, "ssm_inner"),
+                            dtype=cfg.act_dtype, init="zeros"),
+        "conv_b": ParamSpec((batch, W - 1, G * N), ("batch", None, None),
+                            dtype=cfg.act_dtype, init="zeros"),
+        "conv_c": ParamSpec((batch, W - 1, G * N), ("batch", None, None),
+                            dtype=cfg.act_dtype, init="zeros"),
+    }

@@ -1,0 +1,6 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig,
+    adamw_init_specs,
+    adamw_update,
+    lr_schedule,
+)

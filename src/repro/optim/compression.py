@@ -1,0 +1,88 @@
+"""Gradient compression for cross-pod (DCN) reduction.
+
+Two schemes, both with error feedback so compression noise does not bias
+the long-run gradient:
+
+  * int8 stochastic-free symmetric quantisation (per-leaf scale)  — 4x
+  * top-k magnitude sparsification (per-leaf)                     — ~d/k x
+
+At 2+ pods the data-parallel all-reduce crosses DCN (~25 GB/s/host vs
+~50 GB/s/link ICI); compressing the cross-pod leg is the standard trick to
+keep the pod axis from becoming the collective bottleneck.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def topk_sparsify(x: jax.Array, k_frac: float
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Keep the top k_frac fraction by magnitude; returns (values, mask)."""
+    flat = x.reshape(-1)
+    k = max(1, int(flat.size * k_frac))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    mask = (jnp.abs(x) >= thresh).astype(x.dtype)
+    return x * mask, mask
+
+
+@dataclass(frozen=True)
+class CompressionConfig:
+    scheme: str = "int8"          # "none" | "int8" | "topk"
+    topk_frac: float = 0.01
+    error_feedback: bool = True
+
+
+def compress_leaf(g: jax.Array, err: Optional[jax.Array],
+                  cfg: CompressionConfig) -> Tuple[jax.Array, jax.Array]:
+    """Returns (compressed-then-decompressed gradient, new error state).
+
+    The decompressed value is what enters the cross-pod psum; error feedback
+    accumulates what was lost locally and re-injects it next step.
+    """
+    if cfg.scheme == "none" or g.ndim == 0:
+        return g, jnp.zeros_like(g)
+    gf = g.astype(jnp.float32)
+    if err is not None and cfg.error_feedback:
+        gf = gf + err
+    if cfg.scheme == "int8":
+        q, s = quantize_int8(gf)
+        deq = dequantize_int8(q, s)
+    elif cfg.scheme == "topk":
+        deq, _ = topk_sparsify(gf, cfg.topk_frac)
+    else:
+        raise ValueError(cfg.scheme)
+    new_err = (gf - deq) if cfg.error_feedback else jnp.zeros_like(gf)
+    return deq.astype(g.dtype), new_err
+
+
+def compress_tree(grads, err_tree, cfg: CompressionConfig):
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    errs = (treedef.flatten_up_to(err_tree) if err_tree is not None
+            else [None] * len(leaves))
+    outs = [compress_leaf(g, e, cfg) for g, e in zip(leaves, errs)]
+    new_g = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    new_e = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    return new_g, new_e
+
+
+def compression_ratio(cfg: CompressionConfig) -> float:
+    if cfg.scheme == "int8":
+        return 4.0
+    if cfg.scheme == "topk":
+        return 1.0 / max(cfg.topk_frac * 2, 1e-9)   # values + indices
+    return 1.0

@@ -1,0 +1,268 @@
+"""Logical-axis sharding rules (DP / FSDP / TP / EP / SP).
+
+Every parameter and activation is annotated with *logical* axis names; a
+``ShardingRules`` table maps logical names to mesh axes.  Rules degrade
+gracefully: a mesh axis is dropped from a dim whenever the dim size is not
+divisible by the mesh-axis product or the axis is absent from the mesh (e.g.
+``pod`` on the single-pod mesh, or 8 KV heads over a 16-way model axis) —
+the dim is then simply less sharded / replicated, never mis-shaped.
+
+Training ("DEFAULT_RULES"):
+  batch      -> ("pod", "data")     pure DP over pods x data
+  fsdp       -> ("data",)           ZeRO-3 parameter sharding (intra-pod only;
+                                    cross-pod stays replicated: DCN all-gathers
+                                    per layer would dominate)
+  seq_act    -> ("model",)          Megatron-style sequence parallelism of the
+                                    residual stream between blocks
+  heads/mlp/experts/vocab -> model  tensor / expert parallelism
+
+Inference ("INFERENCE_RULES"): params TP-only (replicated over data), batch
+over (pod, data), long KV caches sequence-sharded over ("data", "model").
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+Logical = Tuple[Optional[str], ...]
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    """Declarative parameter: shape + logical axes + init recipe."""
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    dtype: Any = jnp.float32
+    init: str = "normal"          # normal | zeros | ones | embed
+    scale: float = 1.0            # multiplier on fan-in init
+    # name of the dim (index) eligible for extra FSDP sharding; -1 = auto
+    fsdp_dim: int = -1
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    rules: Dict[str, Tuple[str, ...]]
+    fsdp_axes: Tuple[str, ...] = ()
+
+    def mesh_axes(self, logical: Optional[str]) -> Tuple[str, ...]:
+        if logical is None:
+            return ()
+        return tuple(self.rules.get(logical, ()))
+
+
+DEFAULT_RULES = ShardingRules(
+    rules={
+        "batch": ("pod", "data"),
+        "seq_act": ("model",),
+        "kv_seq": (),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "mlp": ("model",),
+        "experts": ("model",),
+        "vocab": ("model",),
+        "embed": (),
+        "ssm_heads": ("model",),
+        "ssm_inner": ("model",),
+    },
+    fsdp_axes=("data",),
+)
+
+def infer_rules(cfg=None) -> "ShardingRules":
+    """Inference sharding rules for a config.
+
+    MoE checkpoints (~100B+ total params at Scout scale) do not fit TP-only
+    on 16 GB chips; serve them with 2D weight sharding (TP over `model` +
+    FSDP-style sharding over `data`, gathered per layer)."""
+    if cfg is not None and getattr(cfg, "num_experts", 0):
+        return ShardingRules(rules=dict(INFERENCE_RULES.rules),
+                             fsdp_axes=("data",))
+    return INFERENCE_RULES
+
+
+INFERENCE_RULES = ShardingRules(
+    rules={
+        "batch": ("pod", "data"),
+        "seq_act": (),
+        "kv_seq": ("data", "model"),   # long-context caches: sequence-sharded
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "mlp": ("model",),
+        "experts": ("model",),
+        "vocab": ("model",),
+        "embed": (),
+        "ssm_heads": ("model",),
+        "ssm_inner": ("model",),
+    },
+    fsdp_axes=(),
+)
+
+
+# --------------------------------------------------------------------------- #
+def _axis_size(mesh: Mesh, axes: Sequence[str]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes], dtype=np.int64)) if axes else 1
+
+
+def _present(mesh: Mesh, axes: Sequence[str]) -> Tuple[str, ...]:
+    return tuple(a for a in axes if a in mesh.shape)
+
+
+def _fit_axes(mesh: Mesh, dim: int, axes: Sequence[str]) -> Tuple[str, ...]:
+    """Keep the longest prefix of `axes` whose size product divides `dim`."""
+    axes = _present(mesh, axes)
+    while axes and dim % _axis_size(mesh, axes) != 0:
+        axes = axes[:-1]
+    return axes
+
+
+def logical_to_mesh_axes(mesh: Mesh, shape: Sequence[int], logical: Logical,
+                         rules: ShardingRules) -> P:
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, logical):
+        axes = tuple(a for a in rules.mesh_axes(name) if a not in used)
+        axes = _fit_axes(mesh, dim, axes)
+        used.update(axes)
+        if len(axes) == 0:
+            out.append(None)
+        elif len(axes) == 1:
+            out.append(axes[0])
+        else:
+            out.append(tuple(axes))
+    return P(*out)
+
+
+def named_sharding(mesh: Mesh, shape: Sequence[int], logical: Logical,
+                   rules: ShardingRules) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_mesh_axes(mesh, shape, logical, rules))
+
+
+def param_sharding(mesh: Mesh, spec: ParamSpec, rules: ShardingRules
+                   ) -> NamedSharding:
+    """TP sharding from logical axes + optional extra FSDP sharding."""
+    pspec = list(logical_to_mesh_axes(mesh, spec.shape, spec.logical, rules))
+    fsdp = _present(mesh, rules.fsdp_axes)
+    if spec.fsdp_dim == -2:   # param opted out of FSDP
+        fsdp = ()
+    used = set()
+    for entry in pspec:
+        if isinstance(entry, str):
+            used.add(entry)
+        elif isinstance(entry, tuple):
+            used.update(entry)
+    if any(a in used for a in fsdp):
+        fsdp = ()             # an fsdp axis is already consumed by this param
+    if fsdp:
+        fsdp_size = _axis_size(mesh, fsdp)
+        # pick the dim to FSDP-shard: explicit, else the largest unsharded dim
+        cand = None
+        if spec.fsdp_dim >= 0 and pspec[spec.fsdp_dim] is None \
+                and spec.shape[spec.fsdp_dim] % fsdp_size == 0:
+            cand = spec.fsdp_dim
+        else:
+            dims = sorted(range(len(spec.shape)), key=lambda i: -spec.shape[i])
+            for i in dims:
+                if pspec[i] is None and spec.shape[i] % fsdp_size == 0:
+                    cand = i
+                    break
+        if cand is not None:
+            pspec[cand] = fsdp if len(fsdp) > 1 else fsdp[0]
+    return NamedSharding(mesh, P(*pspec))
+
+
+# --------------------------------------------------------------------------- #
+# Activation constraints
+# --------------------------------------------------------------------------- #
+_CURRENT: dict = {"mesh": None, "rules": DEFAULT_RULES}
+
+
+class sharding_ctx:
+    """Context manager installing (mesh, rules) for `shard_act` constraints."""
+
+    def __init__(self, mesh: Optional[Mesh], rules: ShardingRules):
+        self.new = {"mesh": mesh, "rules": rules}
+
+    def __enter__(self):
+        self.old = dict(_CURRENT)
+        _CURRENT.update(self.new)
+        return self
+
+    def __exit__(self, *exc):
+        _CURRENT.update(self.old)
+        return False
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CURRENT["mesh"]
+
+
+def current_rules() -> ShardingRules:
+    return _CURRENT["rules"]
+
+
+def shard_act(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op outside a mesh ctx."""
+    mesh, rules = _CURRENT["mesh"], _CURRENT["rules"]
+    if mesh is None:
+        return x
+    ns = named_sharding(mesh, x.shape, tuple(logical), rules)
+    return jax.lax.with_sharding_constraint(x, ns)
+
+
+# --------------------------------------------------------------------------- #
+# Spec-tree utilities
+# --------------------------------------------------------------------------- #
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn: Callable[[ParamSpec], Any], tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_spec)
+
+
+def specs_to_shardings(tree, mesh: Mesh, rules: ShardingRules):
+    return tree_map_specs(lambda s: param_sharding(mesh, s, rules), tree)
+
+
+def specs_to_abstract(tree, mesh: Optional[Mesh] = None,
+                      rules: ShardingRules = DEFAULT_RULES,
+                      dtype_override=None):
+    def mk(s: ParamSpec):
+        dt = dtype_override or s.dtype
+        if mesh is None:
+            return jax.ShapeDtypeStruct(s.shape, dt)
+        return jax.ShapeDtypeStruct(s.shape, dt,
+                                    sharding=param_sharding(mesh, s, rules))
+    return tree_map_specs(mk, tree)
+
+
+def init_param(key, s: ParamSpec, dtype=None):
+    dt = dtype or s.dtype
+    if s.init == "zeros":
+        return jnp.zeros(s.shape, dt)
+    if s.init == "ones":
+        return jnp.ones(s.shape, dt)
+    if s.init == "embed":
+        return (jax.random.normal(key, s.shape) * s.scale).astype(dt)
+    # fan-in scaled normal
+    fan_in = s.shape[0] if len(s.shape) >= 2 else max(s.shape[-1], 1)
+    if len(s.shape) >= 3:  # stacked (layers, in, out) style
+        fan_in = s.shape[-2]
+    std = s.scale / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, s.shape) * std).astype(dt)
+
+
+def init_params(key, tree, dtype=None):
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [init_param(k, s, dtype) for k, s in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, vals)

@@ -1,0 +1,1 @@
+from repro.serving.engine import Request, ServeConfig, ServingEngine  # noqa: F401

@@ -1,0 +1,123 @@
+"""Train/serve state construction + step functions (pjit-ready)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as M
+from repro.optim.adamw import AdamWConfig, adamw_init_specs, adamw_update
+from repro.parallel.sharding import (DEFAULT_RULES, INFERENCE_RULES, infer_rules, ParamSpec,
+                                     ShardingRules, init_params,
+                                     sharding_ctx, specs_to_abstract)
+
+
+def train_state_specs(cfg: ModelConfig, opt: Optional[AdamWConfig] = None
+                      ) -> dict:
+    pspecs = M.model_param_specs(cfg)
+    return {
+        "params": pspecs,
+        "opt": adamw_init_specs(pspecs),
+        "step": ParamSpec((), (), jnp.int32, init="zeros"),
+    }
+
+
+def init_train_state(key, cfg: ModelConfig) -> dict:
+    specs = train_state_specs(cfg)
+    params = init_params(key, specs["params"])
+    opt = init_params(key, specs["opt"])
+    return {"params": params, "opt": opt, "step": jnp.zeros((), jnp.int32)}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, mesh=None,
+                    rules: ShardingRules = DEFAULT_RULES,
+                    compress=None):
+    """compress: optional optim.compression.CompressionConfig — applied to
+    gradients (with persistent error-feedback state in the train state)
+    before the optimizer, modelling the cross-pod DCN reduction leg."""
+    def grad_fn(params, batch):
+        def lf(params):
+            # cast master params to the compute dtype BEFORE the per-layer
+            # FSDP all-gathers so they move bf16, not f32 (halves traffic)
+            half = jax.tree_util.tree_map(
+                lambda p: p.astype(cfg.act_dtype)
+                if p.dtype == jnp.float32 and p.ndim >= 2 else p, params)
+            return M.loss_fn(cfg, half, batch)
+        return jax.value_and_grad(lf, has_aux=True)(params)
+
+    def train_step(state, batch):
+        with sharding_ctx(mesh, rules):
+            n_micro = max(cfg.micro_steps, 1)
+            if n_micro == 1:
+                (loss, metrics), grads = grad_fn(state["params"], batch)
+            else:
+                # gradient accumulation over micro-batches (batch-major
+                # split; mrope "positions" are (3, B, S) — split dim 1)
+                mb = {}
+                for k, v in batch.items():
+                    if k == "positions":
+                        vv = v.reshape((3, n_micro, v.shape[1] // n_micro)
+                                       + v.shape[2:])
+                        mb[k] = jnp.moveaxis(vv, 1, 0)
+                    else:
+                        mb[k] = v.reshape((n_micro, v.shape[0] // n_micro)
+                                          + v.shape[1:])
+
+                def body(acc, microbatch):
+                    g_acc, loss_acc, aux_acc = acc
+                    (_, met), g = grad_fn(state["params"], microbatch)
+                    g_acc = jax.tree_util.tree_map(
+                        lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                    return (g_acc, loss_acc + met["nll"],
+                            aux_acc + met["aux"]), None
+
+                g0 = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32),
+                    state["params"])
+                (grads, nll_sum, aux_sum), _ = jax.lax.scan(
+                    body, (g0, jnp.zeros((), jnp.float32),
+                           jnp.zeros((), jnp.float32)), mb)
+                grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
+                nll = nll_sum / n_micro
+                aux = aux_sum / n_micro
+                loss = nll + cfg.router_aux_coef * aux
+                metrics = {"loss": loss, "nll": nll, "aux": aux}
+            err_state = None
+            if compress is not None and compress.scheme != "none":
+                from repro.optim.compression import compress_tree
+                grads, err_state = compress_tree(
+                    grads, state.get("err"), compress)
+            new_params, new_opt, stats = adamw_update(
+                opt_cfg, state["params"], grads, state["opt"], state["step"])
+            metrics.update(stats)
+            new_state = {"params": new_params, "opt": new_opt,
+                         "step": state["step"] + 1}
+            if err_state is not None:
+                new_state["err"] = err_state
+            return new_state, metrics
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh=None,
+                      rules: Optional[ShardingRules] = None):
+    rules = rules or infer_rules(cfg)
+    def prefill_step(params, batch, caches):
+        with sharding_ctx(mesh, rules):
+            last_logits, new_caches = M.prefill(cfg, params, batch, caches)
+            next_tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+            return next_tok, new_caches
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh=None,
+                     rules: Optional[ShardingRules] = None):
+    rules = rules or infer_rules(cfg)
+    def decode_step(params, batch, caches):
+        with sharding_ctx(mesh, rules):
+            last_logits, new_caches = M.decode_step(cfg, params, batch, caches)
+            next_tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+            return next_tok, new_caches
+    return decode_step

@@ -1,0 +1,138 @@
+"""Per-architecture smoke tests (reduced configs, CPU) + serve consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_config, reduced_config
+from repro.models import model as M
+from repro.optim.adamw import AdamWConfig
+from repro.parallel.sharding import init_params
+from repro.training.train_state import init_train_state, make_train_step
+
+
+def tiny_batch(cfg, B=2, S=32, key=0):
+    k = jax.random.PRNGKey(key)
+    batch = {}
+    if cfg.is_encdec:
+        St = max(S // cfg.encdec_tgt_ratio, 4)
+        batch = {"enc_embeds": jax.random.normal(
+                     k, (B, S, cfg.d_model), cfg.act_dtype) * 0.02,
+                 "tokens": jax.random.randint(k, (B, St), 0, cfg.vocab_size),
+                 "labels": jax.random.randint(k, (B, St), 0, cfg.vocab_size)}
+    else:
+        batch["labels"] = jax.random.randint(k, (B, S), 0, cfg.vocab_size)
+        if cfg.input_kind == "embeds":
+            batch["embeds"] = jax.random.normal(
+                k, (B, S, cfg.d_model), cfg.act_dtype) * 0.02
+        else:
+            batch["tokens"] = jax.random.randint(k, (B, S), 0,
+                                                 cfg.vocab_size)
+    if cfg.mrope:
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(S)[None, None], (3, B, S)).astype(jnp.int32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_train_step_smoke(arch):
+    cfg = reduced_config(get_config(arch))
+    state = init_train_state(jax.random.PRNGKey(0), cfg)
+    batch = tiny_batch(cfg)
+    step = jax.jit(make_train_step(cfg, AdamWConfig(warmup_steps=2)))
+    state2, metrics = step(state, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss), (arch, loss)
+    # roughly ln(vocab) at random init
+    assert 0.5 * np.log(cfg.vocab_size) < loss < 3.0 * np.log(cfg.vocab_size)
+    assert int(state2["step"]) == 1
+    # params actually moved
+    p0 = jax.tree_util.tree_leaves(state["params"])[1]
+    p1 = jax.tree_util.tree_leaves(state2["params"])[1]
+    assert not np.allclose(np.asarray(p0), np.asarray(p1))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_microbatched_matches_plain(arch):
+    cfg = reduced_config(get_config(arch)).replace(dtype="float32")
+    state = init_train_state(jax.random.PRNGKey(0), cfg)
+    batch = tiny_batch(cfg, B=4, S=16)
+    s1, m1 = jax.jit(make_train_step(cfg, AdamWConfig()))(state, batch)
+    cfg2 = cfg.replace(micro_steps=2)
+    s2, m2 = jax.jit(make_train_step(cfg2, AdamWConfig()))(state, batch)
+    # microbatched grad == mean of micro grads; losses match closely
+    assert float(m1["nll"]) == pytest.approx(float(m2["nll"]), rel=1e-4)
+    l1 = jax.tree_util.tree_leaves(s1["params"])
+    l2 = jax.tree_util.tree_leaves(s2["params"])
+    err = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(l1, l2))
+    assert err < 5e-4, (arch, err)
+
+
+@pytest.mark.parametrize("arch", ["internlm2-20b", "gemma3-12b",
+                                  "mamba2-2.7b", "seamless-m4t-medium"])
+def test_prefill_decode_matches_forward(arch):
+    cfg = reduced_config(get_config(arch)).replace(dtype="float32")
+    params = init_params(jax.random.PRNGKey(1), M.model_param_specs(cfg))
+    B, S_total, S_prompt = 2, 12, 5
+    key = jax.random.PRNGKey(2)
+    toks = jax.random.randint(key, (B, S_total), 0, cfg.vocab_size)
+    batch_full = {"tokens": toks}
+    src = 8
+    if cfg.is_encdec:
+        batch_full["enc_embeds"] = jax.random.normal(
+            key, (B, src, cfg.d_model), jnp.float32) * 0.1
+    logits_full, _, _ = M.forward(cfg, params, dict(batch_full), mode="train")
+    caches = init_params(jax.random.PRNGKey(0), M.cache_specs_tree(
+        cfg, B, S_total, src_len=(src if cfg.is_encdec else S_total)))
+    pb = {"tokens": toks[:, :S_prompt]}
+    if cfg.is_encdec:
+        pb["enc_embeds"] = batch_full["enc_embeds"]
+    last, caches = M.prefill(cfg, params, pb, caches)
+    errs = [float(jnp.max(jnp.abs(last - logits_full[:, S_prompt - 1])))]
+    for i in range(S_prompt, S_total):
+        lg, caches = M.decode_step(cfg, params, {"tokens": toks[:, i:i + 1]},
+                                   caches)
+        errs.append(float(jnp.max(jnp.abs(lg - logits_full[:, i]))))
+    scale = float(jnp.max(jnp.abs(logits_full)))
+    assert max(errs) / scale < 2e-3, (arch, errs)
+
+
+def test_decode_with_per_slot_positions():
+    """Continuous batching: two sequences at different positions."""
+    cfg = reduced_config(get_config("internlm2-20b")).replace(dtype="float32")
+    params = init_params(jax.random.PRNGKey(1), M.model_param_specs(cfg))
+    B, S = 2, 10
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0,
+                              cfg.vocab_size)
+    logits_full, _, _ = M.forward(cfg, params, {"tokens": toks},
+                                  mode="train")
+    caches = init_params(jax.random.PRNGKey(0),
+                         M.cache_specs_tree(cfg, B, S))
+    # row 0 prefilled to 4, row 1 prefilled to 7, via masked writes
+    for i in range(7):
+        idx = jnp.asarray([min(i, 4), min(i, 7)], jnp.int32)
+        caches["index"] = idx
+        step_toks = jnp.stack([toks[0, min(i, 4)], toks[1, min(i, 7)]])[:, None]
+        lg, caches = M.decode_step(cfg, params, {"tokens": step_toks}, caches)
+    # after the loop row0 is at 5... simply verify no NaN and shapes
+    assert np.isfinite(np.asarray(lg)).all()
+
+
+def test_param_counts_roughly_match_nameplates():
+    import repro.models.model as MM
+    expect = {"internlm2-20b": 20e9, "granite-8b": 8e9, "qwen3-14b": 14e9,
+              "gemma3-12b": 12e9, "mamba2-2.7b": 2.7e9, "zamba2-7b": 7e9,
+              "qwen2-vl-2b": 2e9}
+    for arch, n in expect.items():
+        cfg = get_config(arch)
+        got = MM.count_params(cfg)
+        assert 0.55 * n < got < 1.75 * n, (arch, got, n)
+
+
+def test_moe_active_params():
+    import repro.models.model as MM
+    cfg = get_config("qwen3-moe-30b-a3b")
+    total = MM.count_params(cfg)
+    active = MM.count_params(cfg, active_only=True)
+    assert 24e9 < total < 36e9, total
+    assert active < 0.2 * total, (active, total)

@@ -1,0 +1,94 @@
+"""Serving engine: continuous batching correctness + (d,p,w) publication."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced_config
+from repro.models import model as M
+from repro.parallel.sharding import init_params
+from repro.serving.engine import ServeConfig, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced_config(get_config("granite-8b")).replace(
+        dtype="float32", vocab_size=128, d_model=32, num_heads=4,
+        num_kv_heads=2, head_dim=8, d_ff=64)
+    params = init_params(jax.random.PRNGKey(0), M.model_param_specs(cfg))
+    return cfg, params
+
+
+def greedy_reference(cfg, params, prompt, max_new):
+    """Direct full-forward greedy decoding (no cache)."""
+    toks = list(map(int, prompt))
+    out = []
+    for _ in range(max_new):
+        logits, _, _ = M.forward(
+            cfg, params, {"tokens": jnp.asarray([toks], jnp.int32)},
+            mode="train")
+        nxt = int(jnp.argmax(logits[0, -1]))
+        out.append(nxt)
+        toks.append(nxt)
+    return out
+
+
+def test_engine_matches_reference_greedy(setup):
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, ServeConfig(slots=2, max_len=64))
+    prompt = np.array([5, 9, 2, 17], np.int32)
+    rid = eng.submit(prompt, max_new=6)
+    reqs = {rid: prompt}
+    done = {}
+    for _ in range(200):
+        eng.step()
+        if not eng.queue and not eng.active:
+            break
+    # find the request output (engine keeps finished out_tokens on requests;
+    # re-submit pattern: collect from history)
+    # simplest: run again tracking the object
+    eng2 = ServingEngine(cfg, params, ServeConfig(slots=2, max_len=64))
+    rid2 = eng2.submit(prompt, max_new=6)
+    req_obj = eng2.queue[0]
+    for _ in range(200):
+        eng2.step()
+        if req_obj.done:
+            break
+    ref = greedy_reference(cfg, params, prompt, 6)
+    assert req_obj.out_tokens == ref, (req_obj.out_tokens, ref)
+
+
+def test_engine_drains_many_requests_and_publishes_units(setup):
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, ServeConfig(slots=3, max_len=64))
+    rng = np.random.RandomState(0)
+    objs = []
+    for i in range(7):
+        p = rng.randint(0, cfg.vocab_size, size=rng.randint(2, 9))
+        eng.submit(p.astype(np.int32), max_new=4)
+    objs = list(eng.queue)
+    for _ in range(500):
+        eng.step()
+        if not eng.queue and not eng.active:
+            break
+    assert all(r.done for r in objs)
+    units = eng.published_units()
+    assert units, "must publish (d,p,w) rows"
+    for b, row in units.items():
+        assert row["p"] >= 1 and row["d"] > 0 and row["w"] >= 0
+
+
+def test_continuous_batching_interleaves(setup):
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, ServeConfig(slots=2, max_len=64))
+    a = eng.submit(np.array([1, 2, 3], np.int32), max_new=8)
+    b = eng.submit(np.array([4, 5], np.int32), max_new=2)
+    c = eng.submit(np.array([6], np.int32), max_new=2)
+    objs = list(eng.queue)
+    ticks = 0
+    while (eng.queue or eng.active) and ticks < 300:
+        eng.step()
+        ticks += 1
+    assert all(r.done for r in objs)
+    # slot reuse happened: 3 requests > 2 slots
+    assert ticks < 300

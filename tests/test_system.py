@@ -1,0 +1,164 @@
+"""End-to-end behaviour tests for the paper's tracker/agent system."""
+import pytest
+
+from repro.core import (Agent, AgentConfig, SimRuntime, TrackerConfig,
+                        TrackerServer, make_prime_app)
+from repro.core.messages import Msg, RESULT
+
+
+def build_cloud(n_leechers=2, parts=24, m_min=1, val_hook=None,
+                timeout=200.0, overhead=0.0):
+    rt = SimRuntime()
+    server = TrackerServer(config=TrackerConfig(ping_interval_s=2.0))
+    rt.add_node(server)
+    host = Agent("host", config=AgentConfig(work_timeout_s=timeout,
+                                            cycle_overhead_s=overhead),
+                 val_hook=val_hook)
+    rt.add_node(host, speed=1.0)
+    app = make_prime_app("app", "host", 3, 24_000, n_parts=parts,
+                         m_min=m_min, sim_time_per_number=1e-4)
+    host.host_app(app)
+    leechers = []
+    for i in range(n_leechers):
+        a = Agent(f"L{i}", config=AgentConfig(work_timeout_s=timeout,
+                                              cycle_overhead_s=overhead))
+        rt.add_node(a, speed=1.0)
+        leechers.append(a)
+    return rt, server, host, app, leechers
+
+
+def test_application_completes_and_validates():
+    rt, server, host, app, leechers = build_cloud()
+    rt.run(until=3600, stop_when=lambda: app.done)
+    assert app.done
+    # every part validated exactly once, results are actual primes
+    assert all(len(p.results) >= 1 for p in app.parts)
+    total = sum(l.completed_cycles["app"] for l in leechers)
+    assert total >= len(app.parts)
+    # the winning results really are primes
+    r0 = app.parts[0].results[0][1]
+    assert 3 in r0 and 4 not in r0 and 5 in r0
+
+
+def test_work_splits_roughly_evenly():
+    rt, server, host, app, leechers = build_cloud(n_leechers=2, parts=40)
+    rt.run(until=3600, stop_when=lambda: app.done)
+    c = [l.completed_cycles["app"] for l in leechers]
+    assert abs(c[0] - c[1]) <= 6, c
+
+
+def test_metrics_published_to_server():
+    rt, server, host, app, _ = build_cloud()
+    rt.run(until=3600, stop_when=lambda: app.done)
+    rt.run(until=rt.now() + 10)
+    row = server.app_list.get("app")
+    assert row is not None
+    m = host.metrics["app"]
+    assert row.p == m.p == len(app.parts)
+    assert row.d == m.d > 0
+    assert row.w == pytest.approx(m.w)
+
+
+def test_host_death_drops_application():
+    rt, server, host, app, leechers = build_cloud(parts=400)
+    rt.run(until=20)              # some progress
+    # kill the host: stop answering pings
+    del rt.nodes["host"]
+    rt.run(until=rt.now() + 60)
+    assert "app" not in server.app_list
+    # leechers eventually STOP the app (dropped from their lists)
+    assert all("app" in l.stopped_apps for l in leechers)
+
+
+def test_tail_timeout_redistributes_leases():
+    rt, server, host, app, leechers = build_cloud(parts=30, timeout=30.0)
+    rt.run(until=10)
+    # one leecher dies mid-work
+    dead = leechers[0]
+    del rt.nodes[dead.node_id]
+    rt.run(until=3600 * 5, stop_when=lambda: app.done)
+    assert app.done  # survivor finished everything despite lost leases
+
+
+def test_majority_voting_rejects_malicious():
+    # m_min=2: every part must be computed twice and agree
+    rt, server, host, app, leechers = build_cloud(n_leechers=3, parts=12,
+                                                  m_min=2)
+    rt.run(until=3600 * 5, stop_when=lambda: app.done)
+    assert app.done
+    assert all(len(p.results) >= 2 for p in app.parts)
+    # m_min scaling of eq (4): p counts every replicated execution
+    assert host.metrics["app"].m_min >= 2
+
+
+def test_val_hook_discards_bad_results():
+    calls = {}
+
+    def val_hook(part_id, result):
+        # reject the first submission of part 0 (simulated corruption)
+        if part_id == 0 and "seen" not in calls:
+            calls["seen"] = True
+            return False
+        return True
+
+    rt, server, host, app, leechers = build_cloud(val_hook=val_hook, parts=8)
+    rt.run(until=3600 * 2, stop_when=lambda: app.done)
+    assert app.done
+    assert calls.get("seen")
+    # part 0 required a re-execution
+    assert len(app.parts[0].results) >= 1
+
+
+def test_all_23_procedures_exist():
+    server_procs = ["PING", "PUSH", "RECV", "VAL", "INIT", "INFO", "WRITE",
+                    "READ"]
+    agent_procs = ["RECV", "SEND", "EVAL", "DIST", "STAT", "VAL", "TAIL",
+                   "REQ", "SCAN", "RUN", "TIME", "COLLECT", "SAVE", "LOAD",
+                   "STOP"]
+    assert len(server_procs) + len(agent_procs) == 23
+    for p in server_procs:
+        assert callable(getattr(TrackerServer, p)), p
+    for p in agent_procs:
+        assert callable(getattr(Agent, p)), p
+
+
+def test_agent_directory_layout(tmp_path):
+    rt = SimRuntime()
+    rt.add_node(TrackerServer())
+    host = Agent("h", config=AgentConfig(root_dir=str(tmp_path)))
+    rt.add_node(host)
+    app = make_prime_app("a1", "h", 3, 4000, n_parts=4,
+                         sim_time_per_number=1e-4)
+    host.host_app(app)
+    leech = Agent("l", config=AgentConfig(root_dir=str(tmp_path)))
+    rt.add_node(leech)
+    rt.run(until=3600, stop_when=lambda: app.done)
+    assert app.done
+    assert (tmp_path / "h" / "Seed" / "App" / "a1" / "app.bin").exists()
+    assert (tmp_path / "h" / "Seed" / "App" / "a1" / "Data" / "Tracker"
+            ).exists()
+    assert (tmp_path / "h" / "Seed" / "App" / "a1" / "Result" / "0.res"
+            ).exists()
+    assert (tmp_path / "l" / "Leech" / "App" / "a1" / "Data" / "Time"
+            ).exists()
+
+
+def test_thread_runtime_runs_real_primes(tmp_path):
+    from repro.core import ThreadRuntime
+    rt = ThreadRuntime(n_workers=2)
+    rt.add_node(TrackerServer(config=TrackerConfig(ping_interval_s=0.2)))
+    host = Agent("h", config=AgentConfig(work_timeout_s=10.0,
+                                         status_interval_s=0.2,
+                                         retry_s=0.1))
+    rt.add_node(host)
+    app = make_prime_app("a1", "h", 3, 3000, n_parts=6)
+    host.host_app(app)
+    for i in range(2):
+        rt.add_node(Agent(f"l{i}", config=AgentConfig(
+            work_timeout_s=10.0, status_interval_s=0.2, retry_s=0.1)))
+    rt.run(until_s=30.0, stop_when=lambda: app.done)
+    assert app.done
+    primes = sorted(set(sum((r for _, r, _ in
+                             (res for p in app.parts for res in [p.results[0]]
+                              )), [])))
+    assert primes[:5] == [3, 5, 7, 11, 13]

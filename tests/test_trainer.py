@@ -1,0 +1,149 @@
+"""Trainer integration: convergence, checkpoint/restart, fault paths."""
+import glob
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.cluster.elastic import plan_resize
+from repro.cluster.sdc import SDCValidator, gradient_fingerprint
+from repro.configs.base import get_config, reduced_config
+from repro.optim.adamw import AdamWConfig
+from repro.training.trainer import Trainer, TrainerConfig
+
+
+def tiny_cfg():
+    return reduced_config(get_config("granite-8b")).replace(
+        vocab_size=64, d_model=32, num_heads=4, num_kv_heads=2, head_dim=8,
+        d_ff=64)
+
+
+def test_loss_decreases():
+    cfg = tiny_cfg()
+    tc = TrainerConfig(batch=8, seq=32, steps=30, log_every=0,
+                       ckpt_every=1000)
+    tr = Trainer(cfg, AdamWConfig(lr=3e-3, warmup_steps=5), tc)
+    tr.init()
+    hist = tr.run()
+    first = np.mean([h["loss"] for h in hist[:5]])
+    last = np.mean([h["loss"] for h in hist[-5:]])
+    assert last < first - 0.1, (first, last)
+
+
+def test_checkpoint_restart_resumes_exactly(tmp_path):
+    cfg = tiny_cfg()
+    opt = AdamWConfig(lr=1e-3, warmup_steps=2)
+    # run 1: 10 steps, checkpoint every 5
+    tc = TrainerConfig(batch=4, seq=16, steps=10, ckpt_every=5,
+                       ckpt_dir=str(tmp_path / "ckpt"), log_every=0)
+    tr1 = Trainer(cfg, opt, tc)
+    tr1.init(seed=7)
+    tr1.run()
+    state_10 = jax.tree_util.tree_map(np.asarray, tr1.state)
+
+    # run 2: fresh process restores at step 10 and continues to 15
+    tc2 = TrainerConfig(batch=4, seq=16, steps=15, ckpt_every=5,
+                        ckpt_dir=str(tmp_path / "ckpt"), log_every=0)
+    tr2 = Trainer(cfg, opt, tc2)
+    tr2.init(seed=999)               # seed ignored on resume
+    assert int(tr2.state["step"]) == 10
+    for a, b in zip(jax.tree_util.tree_leaves(state_10),
+                    jax.tree_util.tree_leaves(tr2.state)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+    # pipeline state resumed (no batch replay)
+    assert tr2.pipeline.state.next_piece == tr1.pipeline.state.next_piece
+    hist = tr2.run()
+    assert int(tr2.state["step"]) == 15
+
+
+def test_deterministic_resume_equals_straight_run(tmp_path):
+    """ckpt@5 -> resume -> 10 gives the same params as straight 10 steps."""
+    cfg = tiny_cfg()
+    opt = AdamWConfig(lr=1e-3, warmup_steps=2)
+    straight = Trainer(cfg, opt, TrainerConfig(batch=4, seq=16, steps=10,
+                                               ckpt_every=1000, log_every=0))
+    straight.init(seed=3)
+    straight.run()
+
+    d = str(tmp_path / "c2")
+    a = Trainer(cfg, opt, TrainerConfig(batch=4, seq=16, steps=5,
+                                        ckpt_every=5, ckpt_dir=d,
+                                        log_every=0))
+    a.init(seed=3)
+    a.run()
+    b = Trainer(cfg, opt, TrainerConfig(batch=4, seq=16, steps=10,
+                                        ckpt_every=5, ckpt_dir=d,
+                                        log_every=0))
+    b.init(seed=3)
+    b.run()
+    for x, y in zip(jax.tree_util.tree_leaves(straight.state["params"]),
+                    jax.tree_util.tree_leaves(b.state["params"])):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-6)
+
+
+def test_dead_member_triggers_redispatch_and_resize():
+    cfg = tiny_cfg()
+    tc = TrainerConfig(batch=4, seq=16, steps=3, log_every=0)
+    tr = Trainer(cfg, AdamWConfig(), tc)
+    tr.init()
+    tr.run()
+    plan = tr.on_member_dead("pod7", alive_pods=3)
+    assert plan.new_pods == 2                 # largest pow2 <= 3
+    assert plan.needs_restart and plan.reshard == "torrent"
+    assert plan.mesh_shape == (2, 16, 16)
+
+
+def test_sdc_flags_minority_replica():
+    v = SDCValidator(m_min=3, m_max=3, every_steps=1)
+    good = {"w": np.ones((4, 4), np.float32)}
+    bad = {"w": np.ones((4, 4), np.float32) * 1.001}  # bitflip-ish
+    assert v.offer(1, "podA", good) is None
+    assert v.offer(1, "podB", good) is None
+    rep = v.offer(1, "podC", bad)
+    assert rep is not None and rep.agree
+    assert rep.flagged == ["podC"]
+
+
+def test_gradient_fingerprint_sensitivity():
+    g = {"a": np.arange(32, dtype=np.float32).reshape(4, 8)}
+    f1 = gradient_fingerprint(g)
+    g2 = {"a": g["a"].copy()}
+    g2["a"][2, 3] += 1e-3
+    assert f1 != gradient_fingerprint(g2)
+    assert f1 == gradient_fingerprint({"a": g["a"].copy()})
+
+
+def test_elastic_plan_shapes():
+    p1 = plan_resize(1)
+    assert p1.mesh_shape == (16, 16) and p1.mesh_axes == ("data", "model")
+    p8 = plan_resize(8, old_pods=8)
+    assert p8.mesh_shape == (8, 16, 16) and not p8.needs_restart
+    p5 = plan_resize(5, old_pods=8)
+    assert p5.new_pods == 4 and p5.needs_restart
+    assert p5.batch_scale == pytest.approx(0.5)
+
+
+def test_grad_compression_trains_and_keeps_error_state():
+    import jax
+    import jax.numpy as jnp
+    from repro.optim.compression import CompressionConfig
+    from repro.training.train_state import init_train_state, make_train_step
+    from repro.optim.adamw import AdamWConfig
+
+    cfg = tiny_cfg()
+    state = init_train_state(jax.random.PRNGKey(0), cfg)
+    k = jax.random.PRNGKey(1)
+    batch = {"tokens": jax.random.randint(k, (4, 32), 0, cfg.vocab_size),
+             "labels": jax.random.randint(k, (4, 32), 0, cfg.vocab_size)}
+    step = jax.jit(make_train_step(cfg, AdamWConfig(lr=3e-3, warmup_steps=2),
+                                   compress=CompressionConfig(scheme="int8")))
+    losses = []
+    for _ in range(8):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert "err" in state
+    # error-feedback state is non-trivial
+    leaves = jax.tree_util.tree_leaves(state["err"])
+    assert any(float(jnp.max(jnp.abs(l))) > 0 for l in leaves)
+    assert losses[-1] < losses[0], losses
