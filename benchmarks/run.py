@@ -27,6 +27,10 @@ def main() -> None:
         elif name == "table3":
             derived = (f"app1={res['app1_h']:.2f}h(2.88) "
                        f"app2={res['app2_h']:.2f}h(3.50)")
+        elif name == "scenario_v":
+            derived = (f"origin_bytes/{res['origin_bytes_reduction']:.0f} "
+                       f"makespan_x{res['makespan_speedup']:.0f} "
+                       f"failover_done={res['failover']['done']}")
         else:
             derived = (f"speedup1={res['speedup_app1']:.2f}(3.5) "
                        f"speedup2={res['speedup_app2']:.2f}(3.3)")

@@ -1,0 +1,19 @@
+"""Version compatibility shims.
+
+`jax.shard_map` graduated from `jax.experimental.shard_map` in jax 0.6;
+this repo targets the new spelling (including its `check_vma` kwarg) but
+must also run on jax 0.4.x where only the experimental module exists and
+the kwarg is called `check_rep`.
+"""
+from __future__ import annotations
+
+try:  # jax >= 0.6
+    from jax import shard_map as shard_map  # type: ignore[attr-defined]
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True, **kwargs):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma, **kwargs)
+
+__all__ = ["shard_map"]

@@ -3,8 +3,11 @@ from repro.core.messages import AppInfo, Msg  # noqa: F401
 from repro.core.metrics import AppMetrics, complexity_hint  # noqa: F401
 from repro.core.runtime import (LinkModel, Node, SimRuntime,  # noqa: F401
                                 ThreadRuntime)
-from repro.core.swarm import plan_broadcast, naive_rounds  # noqa: F401
+from repro.core.swarm import (plan_broadcast, naive_rounds,  # noqa: F401
+                              rarest_first_order)
 from repro.core.tracker_server import TrackerConfig, TrackerServer  # noqa: F401
 from repro.core.validation import VotingPool, majority_vote  # noqa: F401
 from repro.core.workunit import (Application, LeaseTable, Part,  # noqa: F401
-                                 find_primes, make_prime_app)
+                                 PieceInventory, PieceManifest,
+                                 find_primes, make_prime_app,
+                                 register_executable, resolve_executable)

@@ -1,4 +1,4 @@
-"""Volunteer agent (paper §III.E-G, Figs. 3-5).
+"""Volunteer agent (paper §III.E-G, Figs. 3-5; §V swarm extension).
 
 Modules: connector (RECV, SEND), tracker (EVAL, DIST, STAT, VAL, TAIL) and
 worker (REQ, SCAN, RUN, TIME, COLLECT, SAVE, LOAD, STOP) — the paper's 15
@@ -8,6 +8,19 @@ agent procedures.  Every agent is simultaneously:
     validates RESULTs by m_min-way majority voting, reports status via STAT;
   * a LEECHER for other hosts' applications: REQ -> SCAN+RUN -> TIME ->
     COLLECT+LOAD -> SEND result, in a loop until the host runs dry.
+
+The §V extension ("broken to pieces like regular file sharing in torrent")
+adds a third role when an application is published with `swarm=True`:
+
+  * a PIECE PEER: the app image moves as hashed pieces (PIECE_REQ /
+    PIECE_DATA), chosen rarest-first from HAVE announcements — the same
+    policy core/swarm.py's offline planner uses.  Verified pieces are
+    announced (HAVE) and served to other leechers while crunching.  Once the
+    image completes, the agent resolves the executable from the registry
+    keyed by the manifest hash (no back-door into the runtime's node table)
+    and becomes a REPLICA SEEDER: it answers REQ/DIST and VALidates results
+    for the app, keeps in sync with the other seeders via PART_DONE gossip,
+    and can be promoted to host by the tracker if the origin dies.
 
 The dual Seed/ and Leech/ working directories (Fig. 3) are managed by
 core.directory; TAIL's volunteer log lives under Seed/App/<id>/Data/Tracker
@@ -20,13 +33,18 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
 from repro.core import directory as dirs
-from repro.core.messages import (APP_DATA, APP_LIST, BYE, DROP_APP, NO_WORK,
-                                 PING, PONG, REGISTER, REQ, RESULT,
-                                 RESULT_ACK, STATUS, AppInfo, Msg)
+from repro.core.messages import (APP_DATA, APP_LIST, BYE, DROP_APP, HAVE,
+                                 NO_WORK, PART_DONE, PEER_GONE, PIECE_DATA,
+                                 PIECE_REQ, PING, PONG, REGISTER, REQ,
+                                 RESULT, RESULT_ACK, SEEDER_UPDATE, STATUS,
+                                 AppInfo, Msg)
 from repro.core.metrics import AppMetrics
 from repro.core.runtime import Node, Runtime
+from repro.core.swarm import rarest_first_order
 from repro.core.validation import majority_vote
-from repro.core.workunit import Application, LeaseTable, Part
+from repro.core.workunit import (Application, LeaseTable, Part,
+                                 PieceInventory, PieceManifest,
+                                 register_executable, resolve_executable)
 
 
 @dataclass
@@ -42,6 +60,8 @@ class AgentConfig:
     max_parallel_apps: int = 2          # leech this many apps concurrently
     self_leech: bool = False            # hosts also crunch their own apps
     root_dir: Optional[str] = None      # enables on-disk Fig. 3 layout
+    piece_pipeline: int = 4             # outstanding PIECE_REQs per app
+    replica_seed: bool = True           # re-seed completed swarm images
 
 
 class Agent(Node):
@@ -54,6 +74,7 @@ class Agent(Node):
         self.val_hook = val_hook
         # --- seeder state -------------------------------------------------
         self.apps: Dict[str, Application] = {}         # A_self
+        self.replicas: Dict[str, Application] = {}     # re-seeded swarm apps
         self.tail = LeaseTable(self.cfg.work_timeout_s)
         self.tails: Dict[str, LeaseTable] = {}
         self.metrics: Dict[str, AppMetrics] = {}
@@ -67,13 +88,34 @@ class Agent(Node):
         self.stopped_apps: Set[str] = set()
         self.dry_until: Dict[str, float] = {}
         self.completed_at: Dict[str, float] = {}
+        self.no_work_from: Dict[str, Set[str]] = collections.defaultdict(set)
+        # --- piece-peer state (paper §V) ----------------------------------
+        self.manifests: Dict[str, PieceManifest] = {}
+        self.inventories: Dict[str, PieceInventory] = {}
+        self.images: Dict[str, str] = {}        # app_id -> verified manifest
+        self.full_seeders: Dict[str, Set[str]] = collections.defaultdict(set)
+        self.peer_pieces: Dict[str, Dict[str, Set[int]]] = \
+            collections.defaultdict(dict)       # app -> partial holders
+        self.swarm_peers: Dict[str, Set[str]] = collections.defaultdict(set)
+        self.piece_pending: Dict[str, Dict[int, tuple]] = \
+            collections.defaultdict(dict)       # app -> piece -> (peer, t)
+        self.peer_load: Dict[str, int] = collections.defaultdict(int)
+        self.bad_piece_peers: Dict[str, Set[str]] = \
+            collections.defaultdict(set)
         self.dir = (dirs.AgentDirs(self.cfg.root_dir, node_id)
                     if self.cfg.root_dir else None)
 
     # ------------------------------------------------------------------ #
     def host_app(self, app: Application) -> None:
         app.host_id = self.node_id
+        manifest = app.ensure_manifest()
+        # publishing an app puts its executable behind the manifest hash:
+        # only holders of the verified image may resolve and run it
+        register_executable(manifest.manifest_hash, app.run_fn, app.cost_fn,
+                            blueprint=app.blueprint())
         self.apps[app.app_id] = app
+        self.manifests[app.app_id] = manifest
+        self.images[app.app_id] = manifest.manifest_hash
         self.tails[app.app_id] = LeaseTable(self.cfg.work_timeout_s)
         m = AppMetrics(d_app_bytes=app.app_bytes, m_min=app.m_min)
         self.metrics[app.app_id] = m
@@ -89,6 +131,13 @@ class Agent(Node):
         rt.set_timer(self.node_id, "tail", self.cfg.work_timeout_s / 2,
                      periodic=True)
 
+    def shutdown(self) -> None:
+        """Graceful leave: BYE tells the server to reclaim this volunteer's
+        leases immediately instead of waiting for TAIL timeouts."""
+        self.SEND(self.server_id, Msg(BYE, self.node_id,
+                                      {"apps": list(self.apps)},
+                                      size_bytes=64))
+
     def _self_rows(self) -> List[AppInfo]:
         rows = []
         for app in self.apps.values():
@@ -96,8 +145,21 @@ class Agent(Node):
             rows.append(AppInfo(app.app_id, self.node_id, d=m.d, p=m.p,
                                 w=m.w, n_parts=len(app.parts),
                                 parts_remaining=sum(
-                                    0 if p.done else 1 for p in app.parts)))
+                                    0 if p.done else 1 for p in app.parts),
+                                seeders=(self.node_id,),
+                                manifest=(app.manifest if app.swarm
+                                          else None)))
         return rows
+
+    def _seed_loads(self) -> Dict[str, int]:
+        """Active lease counts for every app this node seeds (origin or
+        replica); the tracker uses them for least-loaded routing."""
+        loads = {}
+        for app_id in list(self.apps) + list(self.replicas):
+            tail = self.tails.get(app_id)
+            if tail is not None:
+                loads[app_id] = sum(len(ls) for ls in tail.active().values())
+        return loads
 
     # ========================== connector =============================== #
     def RECV(self, msg: Msg) -> None:
@@ -120,17 +182,23 @@ class Agent(Node):
         elif kind == APP_DATA:
             self._on_app_data(msg)
         elif kind == NO_WORK:
-            app_id = msg.payload["app_id"]
-            self.current.pop(app_id, None)
-            # back off: the host may only be out of *leasable* parts right
-            # now (all leased, not all validated) — retry later
-            self.dry_until[app_id] = self.rt.now() + self.cfg.retry_s
-            self.rt.set_timer(self.node_id, "retry", self.cfg.retry_s)
-            self._maybe_start_work()
+            self._on_no_work(msg)
         elif kind == RESULT:
             self.VAL(msg)
         elif kind == RESULT_ACK:
             self._on_result_ack(msg)
+        elif kind == HAVE:
+            self._on_have(msg)
+        elif kind == PIECE_REQ:
+            self._on_piece_req(msg)
+        elif kind == PIECE_DATA:
+            self._on_piece_data(msg)
+        elif kind == PART_DONE:
+            self._on_part_done(msg)
+        elif kind == PEER_GONE:
+            self._on_peer_gone(msg.payload["node"])
+        elif kind == SEEDER_UPDATE:
+            self._on_seeder_update(msg)
 
     def SEND(self, dst: str, msg: Msg) -> None:
         self.rt.send(dst, msg)
@@ -145,15 +213,34 @@ class Agent(Node):
             app.m_min += 1
             self.metrics[app_id].m_min = app.m_min
 
+    def _seeded_app(self, app_id: str) -> Optional[Application]:
+        return self.apps.get(app_id) or self.replicas.get(app_id)
+
+    def _partition_pending(self, app: Application,
+                           pending: List[Part]) -> List[Part]:
+        """Split the part space across the current seeder set so concurrent
+        seeders rarely lease the same part; fall back to the full pending
+        list when this seeder's partition is drained (endgame)."""
+        if not app.swarm:
+            return pending
+        row = self._row_for(app.app_id)
+        seeders = sorted(set(row.seeders if row else ()) | {self.node_id})
+        if len(seeders) <= 1:
+            return pending
+        idx = seeders.index(self.node_id)
+        mine = [p for p in pending if p.part_id % len(seeders) == idx]
+        return mine or pending
+
     def DIST(self, volunteer: str, app_id: str) -> None:
         """Lease the next pending part to `volunteer` and ship app+data."""
-        app = self.apps.get(app_id)
+        app = self._seeded_app(app_id)
         if app is None:
             self.SEND(volunteer, Msg(NO_WORK, self.node_id,
                                      {"app_id": app_id}, size_bytes=64))
             return
         tail = self.tails[app_id]
-        pending = app.pending_parts(tail.active())
+        pending = self._partition_pending(app,
+                                          app.pending_parts(tail.active()))
         if not pending:
             self.SEND(volunteer, Msg(NO_WORK, self.node_id,
                                      {"app_id": app_id}, size_bytes=64))
@@ -164,22 +251,34 @@ class Agent(Node):
             self.dir.tracker_log(app_id,
                                  f"{self.rt.now():.3f} lease part="
                                  f"{part.part_id} to={volunteer}")
+        manifest = app.manifest
+        if app.swarm:
+            # piece-wise mode: the image moved separately as pieces, so
+            # APP_DATA carries only the part payload
+            size = 96 + part.data_bytes
+            app_bytes = 0
+        else:
+            size = app.app_bytes + part.data_bytes
+            app_bytes = app.app_bytes
         self.SEND(volunteer, Msg(
             APP_DATA, self.node_id,
             {"app_id": app_id, "part_id": part.part_id,
-             "payload": part.payload, "app_bytes": app.app_bytes,
-             "data_bytes": part.data_bytes},
-            size_bytes=app.app_bytes + part.data_bytes))
+             "payload": part.payload, "app_bytes": app_bytes,
+             "data_bytes": part.data_bytes,
+             "manifest_hash": (manifest.manifest_hash if manifest
+                               else None)},
+            size_bytes=size))
 
     def STAT(self) -> None:
         """Update validated-work status (incl. d, w) to the server."""
         self.SEND(self.server_id, Msg(STATUS, self.node_id,
-                                      {"apps": self._self_rows()}))
+                                      {"apps": self._self_rows(),
+                                       "loads": self._seed_loads()}))
 
     def VAL(self, msg: Msg) -> None:
         """Validate a RESULT by majority voting once m_min results arrived."""
         app_id = msg.payload["app_id"]
-        app = self.apps.get(app_id)
+        app = self._seeded_app(app_id)
         if app is None:
             return
         part_id = msg.payload["part_id"]
@@ -200,15 +299,21 @@ class Agent(Node):
                                        quorum=app.m_min)
             if ok:
                 part.done = True
-                m = self.metrics[app_id]
-                m.record_cycle(msg.payload.get("data_bytes", part.data_bytes),
-                               msg.payload.get("time_s", 0.0))
+                m = self.metrics.get(app_id)
+                if m is not None:
+                    m.record_cycle(
+                        msg.payload.get("data_bytes", part.data_bytes),
+                        msg.payload.get("time_s", 0.0),
+                        app_downloaded=not app.swarm)
                 self.EVAL(app_id, True)
                 if self.dir:
                     self.dir.save_seed_result(app_id, part_id, winner)
+                if app.swarm:
+                    self._gossip_part_done(app_id, [(part_id, winner)])
                 if app.done and app_id not in self.completed_at:
                     self.completed_at[app_id] = self.rt.now()
-                self.STAT()
+                if app_id in self.apps:
+                    self.STAT()
         self.SEND(msg.src, Msg(RESULT_ACK, self.node_id,
                                {"app_id": app_id, "part_id": part_id,
                                 "valid": True}, size_bytes=64))
@@ -227,10 +332,254 @@ class Agent(Node):
                 # the paper drops the volunteer from the mapping list and
                 # redistributes on the next REQ; nothing else to do here
 
+    # ================== seeder-set sync (paper §V) ====================== #
+    def _other_seeders(self, app_id: str) -> Set[str]:
+        row = self._row_for(app_id)
+        peers = set(row.seeders) | {row.host_id} if row else set()
+        peers |= self.swarm_peers.get(app_id, set())
+        peers.discard(self.node_id)
+        return peers
+
+    def _gossip_part_done(self, app_id: str,
+                          parts: List[tuple]) -> None:
+        for peer in self._other_seeders(app_id):
+            self.SEND(peer, Msg(PART_DONE, self.node_id,
+                                {"app_id": app_id, "parts": parts},
+                                size_bytes=96 + 32 * len(parts)))
+
+    def _on_part_done(self, msg: Msg) -> None:
+        app = self._seeded_app(msg.payload["app_id"])
+        if app is None:
+            return
+        app_id = msg.payload["app_id"]
+        for part_id, winner in msg.payload["parts"]:
+            part = app.parts[part_id]
+            if not part.done:
+                part.done = True
+                part.results.append((msg.src, winner, 0.0))
+        if app.done and app_id not in self.completed_at:
+            self.completed_at[app_id] = self.rt.now()
+
+    def _on_seeder_update(self, msg: Msg) -> None:
+        """Relayed by the tracker: a new replica joined the seeder set —
+        bring it up to date on validated parts."""
+        app_id = msg.payload["app_id"]
+        new_seeder = msg.payload["seeder"]
+        app = self._seeded_app(app_id)
+        if app is None or new_seeder == self.node_id:
+            return
+        self.swarm_peers[app_id].add(new_seeder)
+        done = [(p.part_id, (p.results[0][1] if p.results else None))
+                for p in app.parts if p.done]
+        if done:
+            self.SEND(new_seeder, Msg(PART_DONE, self.node_id,
+                                      {"app_id": app_id, "parts": done},
+                                      size_bytes=96 + 32 * len(done)))
+
+    def _on_peer_gone(self, node: str) -> None:
+        """A volunteer left (BYE) or died: reclaim its leases immediately
+        instead of waiting for TAIL timeout, and forget its pieces."""
+        for app_id, tail in self.tails.items():
+            freed = tail.drop_volunteer(node)
+            if freed and self.dir:
+                self.dir.tracker_log(app_id,
+                                     f"{self.rt.now():.3f} peer_gone "
+                                     f"volunteer={node} parts={freed}")
+        for app_id in list(self.peer_pieces):
+            self.peer_pieces[app_id].pop(node, None)
+        for peers in self.swarm_peers.values():
+            peers.discard(node)
+        for app_id in list(self.full_seeders):
+            self.full_seeders[app_id].discard(node)
+        self.peer_load.pop(node, None)
+        # re-route any piece requests outstanding at the dead peer
+        for app_id, pending in self.piece_pending.items():
+            stale = [pid for pid, (peer, _) in pending.items()
+                     if peer == node]
+            for pid in stale:
+                del pending[pid]
+            if stale:
+                self._pump_pieces(app_id)
+        # re-route in-flight work pointed at the dead peer
+        for app_id, ctx in list(self.current.items()):
+            if ctx.get("host") == node and not ctx.get("busy"):
+                self._request_work(app_id)
+
+    # ==================== piece transfer (paper §V) ===================== #
+    def _piece_avail(self, app_id: str) -> Dict[int, int]:
+        n_full = len(self.full_seeders.get(app_id, ()))
+        avail: Dict[int, int] = collections.defaultdict(lambda: 0)
+        manifest = self.manifests.get(app_id)
+        if manifest is not None:
+            for p in range(manifest.n_pieces):
+                avail[p] = n_full
+        for have in self.peer_pieces.get(app_id, {}).values():
+            for p in have:
+                avail[p] += 1
+        return avail
+
+    def _holders_of(self, app_id: str, piece_id: int) -> List[str]:
+        holders = set(self.full_seeders.get(app_id, ()))
+        for peer, have in self.peer_pieces.get(app_id, {}).items():
+            if piece_id in have:
+                holders.add(peer)
+        holders.discard(self.node_id)
+        holders -= self.bad_piece_peers.get(app_id, set())
+        return sorted(holders)
+
+    def _pump_pieces(self, app_id: str) -> None:
+        """Issue PIECE_REQs, rarest-first, to the least-loaded holders."""
+        inv = self.inventories.get(app_id)
+        if inv is None or inv.complete:
+            return
+        pending = self.piece_pending[app_id]
+        missing = [p for p in inv.missing() if p not in pending]
+        # stable per-node offset staggers tie-breaks so leechers start on
+        # different pieces (random-first-piece, deterministically)
+        off = sum(ord(c) for c in self.node_id + app_id)
+        order = rarest_first_order(missing, self._piece_avail(app_id),
+                                   offset=off)
+        now = self.rt.now()
+        # at most one in-flight request per holder: committing several
+        # pieces to one uplink queues them behind each other while other
+        # holders idle, and starves the seeder-egress reduction
+        busy = {peer for peer, _ in pending.values()}
+        for piece_id in order:
+            if len(pending) >= self.cfg.piece_pipeline:
+                break
+            holders = [h for h in self._holders_of(app_id, piece_id)
+                       if h not in busy]
+            if not holders:
+                continue
+            peer = min(holders, key=lambda h: (self.peer_load[h], h))
+            pending[piece_id] = (peer, now)
+            busy.add(peer)
+            self.peer_load[peer] += 1
+            self.SEND(peer, Msg(PIECE_REQ, self.node_id,
+                                {"app_id": app_id, "piece_id": piece_id},
+                                size_bytes=96))
+
+    def _our_bitfield(self, app_id: str) -> Tuple[int, ...]:
+        if app_id in self.images:
+            manifest = self.manifests.get(app_id)
+            return tuple(range(manifest.n_pieces)) if manifest else ()
+        inv = self.inventories.get(app_id)
+        return inv.bitfield() if inv else ()
+
+    def _on_piece_req(self, msg: Msg) -> None:
+        app_id = msg.payload["app_id"]
+        piece_id = msg.payload["piece_id"]
+        self.swarm_peers[app_id].add(msg.src)
+        manifest = self.manifests.get(app_id)
+        inv = self.inventories.get(app_id)
+        holds = (app_id in self.images or (inv is not None
+                                           and inv.has(piece_id)))
+        if manifest is None or not holds:
+            # tell the requester what we actually have so it re-routes
+            self.SEND(msg.src, Msg(HAVE, self.node_id,
+                                   {"app_id": app_id,
+                                    "pieces": list(self._our_bitfield(
+                                        app_id))},
+                                   size_bytes=96))
+            return
+        self.SEND(msg.src, Msg(
+            PIECE_DATA, self.node_id,
+            {"app_id": app_id, "piece_id": piece_id,
+             "proof": manifest.piece_hashes[piece_id],
+             "have": list(self._our_bitfield(app_id))},
+            size_bytes=96 + manifest.piece_size(piece_id)))
+
+    def _on_piece_data(self, msg: Msg) -> None:
+        app_id = msg.payload["app_id"]
+        piece_id = msg.payload["piece_id"]
+        self.peer_pieces[app_id][msg.src] = set(msg.payload.get("have", ()))
+        self.swarm_peers[app_id].add(msg.src)
+        pending = self.piece_pending[app_id]
+        if pending.get(piece_id, (None,))[0] == msg.src:
+            del pending[piece_id]
+            self.peer_load[msg.src] = max(0, self.peer_load[msg.src] - 1)
+        inv = self.inventories.get(app_id)
+        if inv is None or inv.complete:
+            return
+        if not inv.add(piece_id, msg.payload["proof"]):
+            # corrupt piece: never ask this peer again, fetch elsewhere
+            self.bad_piece_peers[app_id].add(msg.src)
+            self._pump_pieces(app_id)
+            return
+        manifest = inv.manifest
+        self.leech_bytes[app_id] += manifest.piece_size(piece_id)
+        if self.dir:
+            self.dir.save_piece(app_id, piece_id, msg.payload["proof"])
+        # announce to known peers directly AND via the tracker relay.  The
+        # relay alone would suffice for reach, but the extra hop delays
+        # rarity information enough to push measurably more piece traffic
+        # back onto the origin; duplicate 96-byte announces are cheap next
+        # to the pieces they steer.
+        announce = {"app_id": app_id, "pieces": [piece_id]}
+        for peer in sorted(self.swarm_peers[app_id] - {msg.src,
+                                                       self.node_id}):
+            self.SEND(peer, Msg(HAVE, self.node_id, dict(announce),
+                                size_bytes=96))
+        self.SEND(self.server_id, Msg(HAVE, self.node_id, dict(announce),
+                                      size_bytes=96))
+        if inv.complete:
+            self._image_complete(app_id)
+        else:
+            self._pump_pieces(app_id)
+
+    def _on_have(self, msg: Msg) -> None:
+        app_id = msg.payload["app_id"]
+        pieces = set(msg.payload["pieces"])
+        # the tracker relays announces with the originating peer attached
+        peer = msg.payload.get("peer", msg.src)
+        if peer == self.node_id:
+            return
+        self.swarm_peers[app_id].add(peer)
+        known = self.peer_pieces[app_id].setdefault(peer, set())
+        known |= pieces
+        # requests outstanding at a peer that turns out to lack the piece
+        # are re-routed right away
+        pending = self.piece_pending[app_id]
+        stale = [pid for pid, (p, _) in pending.items()
+                 if p == peer and pid not in known]
+        for pid in stale:
+            del pending[pid]
+            self.peer_load[peer] = max(0, self.peer_load[peer] - 1)
+        self._pump_pieces(app_id)
+
+    def _image_complete(self, app_id: str) -> None:
+        """All pieces verified: unpack the executable via the registry and
+        join the seeder set as a replica."""
+        inv = self.inventories[app_id]
+        mh = inv.manifest.manifest_hash
+        self.images[app_id] = mh
+        entry = resolve_executable(mh)
+        if (self.cfg.replica_seed and entry is not None
+                and entry.blueprint is not None
+                and app_id not in self.apps
+                and app_id not in self.replicas):
+            app = entry.blueprint()
+            self.replicas[app_id] = app
+            self.tails.setdefault(app_id,
+                                  LeaseTable(self.cfg.work_timeout_s))
+            self.metrics.setdefault(app_id, AppMetrics(
+                d_app_bytes=app.app_bytes, m_min=app.m_min))
+            self.SEND(self.server_id, Msg(SEEDER_UPDATE, self.node_id,
+                                          {"app_id": app_id,
+                                           "seeder": self.node_id},
+                                          size_bytes=96))
+        ctx = self.current.get(app_id)
+        if ctx is not None and ctx.get("fetching"):
+            self._request_work(app_id)
+
     # ============================ worker ================================ #
     def REQ(self, app_id: str, host_id: str) -> None:
         """Request application + next data part from the host."""
-        self.current.setdefault(app_id, {"host": host_id, "busy": False})
+        ctx = self.current.setdefault(app_id, {"host": host_id,
+                                               "busy": False})
+        ctx["host"] = host_id
+        ctx["fetching"] = False
+        ctx["last_req"] = self.rt.now()
         self.SEND(host_id, Msg(REQ, self.node_id, {"app_id": app_id},
                                size_bytes=96))
 
@@ -243,36 +592,26 @@ class Agent(Node):
             host_id: str) -> None:
         """Execute one part; TIME marks start/end via the runtime."""
         ctx = self.current.get(app_id)
-        if ctx is None:
-            return
+        if ctx is None or ctx.get("busy"):
+            return      # stale APP_DATA must not double-submit work
         ctx["busy"] = True
-        row = self._row_for(app_id)
         sim_dur = None
         fn = None
-        app = None
-        for a in self.app_list:
-            if a.app_id == app_id:
-                app = a
-        # resolve executable: hosts ship cost/run fns out-of-band in this
-        # in-process transport (a real deployment ships code in APP_DATA)
-        host_app = self._resolve_app(app_id, host_id)
-        if host_app is not None:
-            if host_app.cost_fn is not None:
+        # resolve the executable from the registry, keyed by the manifest
+        # hash of the (verified) image this agent holds
+        mh = self.images.get(app_id)
+        entry = resolve_executable(mh) if mh else None
+        if entry is not None:
+            if entry.cost_fn is not None:
                 # work units at reference speed 1.0; the runtime's processor-
                 # sharing executor applies node speed and contention
-                sim_dur = host_app.cost_fn(payload, 1.0) \
+                sim_dur = entry.cost_fn(payload, 1.0) \
                     + self.cfg.cycle_overhead_s
-            if host_app.run_fn is not None:
-                fn = (lambda p=payload, f=host_app.run_fn: f(p))
+            if entry.run_fn is not None:
+                fn = (lambda p=payload, f=entry.run_fn: f(p))
         tag = (app_id, part_id, host_id)
         self.TIME(app_id, "start")
         self.rt.submit_work(self.node_id, tag, fn, sim_duration_s=sim_dur)
-
-    def _resolve_app(self, app_id: str, host_id: str) -> Optional[Application]:
-        host = getattr(self.rt, "nodes", {}).get(host_id)
-        if host is not None and hasattr(host, "apps"):
-            return host.apps.get(app_id)
-        return None
 
     def TIME(self, app_id: str, mark: str) -> None:
         """Track working time; log kept under Leech/App/Data/Time (Fig. 3)."""
@@ -300,6 +639,18 @@ class Agent(Node):
         self.current.pop(app_id, None)
         self.stopped_apps.add(app_id)
         self.app_list = [a for a in self.app_list if a.app_id != app_id]
+        for piece_id, (peer, _) in self.piece_pending.pop(app_id,
+                                                          {}).items():
+            self.peer_load[peer] = max(0, self.peer_load[peer] - 1)
+        self.inventories.pop(app_id, None)
+        self.replicas.pop(app_id, None)
+        if app_id not in self.apps:
+            self.images.pop(app_id, None)
+            self.manifests.pop(app_id, None)
+        self.peer_pieces.pop(app_id, None)
+        self.swarm_peers.pop(app_id, None)
+        self.full_seeders.pop(app_id, None)
+        self.no_work_from.pop(app_id, None)
         if self.dir:
             self.dir.drop_leech_app(app_id)
         self._maybe_start_work()
@@ -311,8 +662,58 @@ class Agent(Node):
                 return a
         return None
 
+    def _work_candidates(self, row: AppInfo) -> List[str]:
+        """Seeders this leecher may REQ work from, least-loaded first (the
+        tracker orders `row.seeders` by reported load)."""
+        cands = [s for s in row.seeders if s != self.node_id]
+        if row.host_id != self.node_id:
+            if row.host_id not in cands:
+                cands.insert(0, row.host_id)
+        elif not cands:
+            # self-leech (paper Scenario III/IV): the host crunches its own
+            # application, REQ/DIST looping back through itself
+            cands = [self.node_id]
+        if not cands:
+            return []
+        # stable per-leecher rotation spreads first REQs across seeders
+        off = sum(ord(c) for c in self.node_id + row.app_id) % len(cands)
+        return cands[off:] + cands[:off]
+
+    def _request_work(self, app_id: str) -> bool:
+        row = self._row_for(app_id)
+        if row is None:
+            return False
+        tried = self.no_work_from.get(app_id, set())
+        for cand in self._work_candidates(row):
+            if cand not in tried:
+                self.REQ(app_id, cand)
+                return True
+        return False
+
     def _on_app_list(self, rows: List[AppInfo]) -> None:
         self.app_list = [r for r in rows if r.app_id not in self.stopped_apps]
+        for row in self.app_list:
+            if row.manifest is not None:
+                self.full_seeders[row.app_id] = \
+                    set(row.seeders) | {row.host_id}
+            # tracker promoted this node from replica to host (origin died)
+            if row.host_id == self.node_id and row.app_id in self.replicas:
+                app = self.replicas.pop(row.app_id)
+                app.host_id = self.node_id
+                self.apps[row.app_id] = app
+                self.current.pop(row.app_id, None)
+                self.STAT()
+            # the seeder this leecher worked with vanished: re-route
+            ctx = self.current.get(row.app_id)
+            if ctx is not None and ctx.get("fetching"):
+                self._pump_pieces(row.app_id)
+            elif ctx is not None:
+                host = ctx.get("host")
+                live = set(row.seeders) | {row.host_id}
+                if host is not None and host not in live:
+                    ctx["host"] = None
+                    if not ctx.get("busy"):
+                        self._request_work(row.app_id)
         self._maybe_start_work()
 
     def _maybe_start_work(self) -> None:
@@ -329,16 +730,56 @@ class Agent(Node):
                 continue    # host reported it complete
             if self.dry_until.get(row.app_id, -1.0) > now:
                 continue    # backing off after NO_WORK
-            self.REQ(row.app_id, row.host_id)
+            if row.manifest is not None and row.app_id not in self.images:
+                # swarm app: fetch the image piece-wise before crunching
+                self.current[row.app_id] = {"host": None, "busy": False,
+                                            "fetching": True,
+                                            "last_req": now}
+                self.manifests.setdefault(row.app_id, row.manifest)
+                self.inventories.setdefault(
+                    row.app_id, PieceInventory(row.manifest))
+                # join the swarm: the tracker relays this (empty) announce
+                # so existing members learn about us and vice versa
+                self.SEND(self.server_id, Msg(
+                    HAVE, self.node_id,
+                    {"app_id": row.app_id, "pieces": []}, size_bytes=96))
+                self._pump_pieces(row.app_id)
+            else:
+                if not self._request_work(row.app_id):
+                    continue
             active += 1
+
+    def _on_no_work(self, msg: Msg) -> None:
+        app_id = msg.payload["app_id"]
+        ctx = self.current.get(app_id)
+        if ctx is None:
+            return
+        # this seeder is (momentarily) dry; try the next replica before
+        # backing off — other seeders may still hold leasable parts
+        self.no_work_from[app_id].add(msg.src)
+        if self._request_work(app_id):
+            return
+        self.current.pop(app_id, None)
+        self.no_work_from.pop(app_id, None)
+        # back off: the app may only be out of *leasable* parts right
+        # now (all leased, not all validated) — retry later
+        self.dry_until[app_id] = self.rt.now() + self.cfg.retry_s
+        self.rt.set_timer(self.node_id, "retry", self.cfg.retry_s)
+        self._maybe_start_work()
 
     def _on_app_data(self, msg: Msg) -> None:
         app_id = msg.payload["app_id"]
         ctx = self.current.get(app_id)
         if ctx is None or ctx.get("busy"):
             return
+        mh = msg.payload.get("manifest_hash")
+        if mh is not None and msg.payload.get("app_bytes", 0) > 0:
+            # monolithic shipment: the full image rode along, so this agent
+            # now holds it and may resolve the executable
+            self.images.setdefault(app_id, mh)
         nbytes = self.SCAN(msg.payload)
         ctx["bytes"] = nbytes
+        self.no_work_from.get(app_id, set()).discard(msg.src)
         self.RUN(app_id, msg.payload["part_id"], msg.payload["payload"],
                  msg.src)
 
@@ -349,10 +790,14 @@ class Agent(Node):
         if ctx is None:
             return      # STOPped while running
         ctx["busy"] = False
+        ctx["last_req"] = self.rt.now()
         info = self.COLLECT(app_id, elapsed_s, ctx.get("bytes", 0))
         self.SAVE(app_id, part_id, result)
         loaded = self.LOAD(app_id, part_id)
-        self.SEND(host_id, Msg(RESULT, self.node_id, {
+        # deliver to the live seeder for this app: if the one that leased
+        # the part died meanwhile, its successor revalidates the part
+        dest = ctx.get("host") or host_id
+        self.SEND(dest, Msg(RESULT, self.node_id, {
             "app_id": app_id, "part_id": part_id,
             "result": loaded if loaded is not None else result,
             "time_s": info["time_s"], "data_bytes": info["data_bytes"],
@@ -365,13 +810,39 @@ class Agent(Node):
             # keep leeching the same app until the host runs dry
             self.REQ(app_id, msg.src)
 
+    def _recover_stalled(self) -> None:
+        """Periodic self-heal: re-issue piece requests and work REQs that
+        went unanswered (e.g. the peer died before PEER_GONE propagated)."""
+        now = self.rt.now()
+        # the threshold must sit above any legitimate queueing delay of a
+        # bulk APP_DATA/PIECE_DATA transfer (a saturated seeder uplink can
+        # hold a reply for a long while) — use the TAIL timescale, same as
+        # the seeders' own lease expiry
+        stall = self.cfg.work_timeout_s
+        for app_id, ctx in list(self.current.items()):
+            if ctx.get("fetching"):
+                pending = self.piece_pending.get(app_id, {})
+                stale = [pid for pid, (peer, t) in pending.items()
+                         if now - t > stall]
+                for pid in stale:
+                    peer, _ = pending.pop(pid)
+                    self.peer_load[peer] = max(0, self.peer_load[peer] - 1)
+                self._pump_pieces(app_id)
+            elif not ctx.get("busy") and now - ctx.get("last_req",
+                                                       0.0) > stall:
+                self.no_work_from.pop(app_id, None)
+                self._request_work(app_id)
+
     def on_message(self, msg: Msg) -> None:
         self.RECV(msg)
 
     def on_timer(self, name: str) -> None:
         if name == "status":
-            if self.apps:
+            # replicas must report too: their lease counts feed the
+            # tracker's least-loaded routing and promotion choices
+            if self.apps or self.replicas:
                 self.STAT()
+            self._recover_stalled()
         elif name == "tail":
             self.TAIL()
         elif name == "retry":

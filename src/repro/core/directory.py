@@ -45,6 +45,31 @@ class AgentDirs:
         with open(os.path.join(d, f"{part_id}.res"), "w") as f:
             json.dump(result, f)
 
+    # ---- piece cache (paper §V swarm extension) --------------------------
+    # Verified image pieces live under Leech/App/<app_id>/Pieces so a
+    # volunteer can re-seed them; once the image completes the leecher is a
+    # replica and the cache doubles as its Seed copy.
+    def save_piece(self, app_id: str, piece_id: int, proof: str) -> None:
+        d = os.path.join(self.base, "Leech", "App", app_id, "Pieces")
+        os.makedirs(d, exist_ok=True)
+        with open(os.path.join(d, f"{piece_id}.piece"), "w") as f:
+            f.write(proof)
+
+    def load_piece(self, app_id: str, piece_id: int) -> Optional[str]:
+        p = os.path.join(self.base, "Leech", "App", app_id, "Pieces",
+                         f"{piece_id}.piece")
+        if not os.path.exists(p):
+            return None
+        with open(p) as f:
+            return f.read()
+
+    def list_pieces(self, app_id: str) -> list:
+        d = os.path.join(self.base, "Leech", "App", app_id, "Pieces")
+        if not os.path.isdir(d):
+            return []
+        return sorted(int(f.split(".")[0]) for f in os.listdir(d)
+                      if f.endswith(".piece"))
+
     # ---- leech side ------------------------------------------------------
     def time_log(self, app_id: str, line: str) -> None:
         d = os.path.join(self.base, "Leech", "App", app_id, "Data")

@@ -16,7 +16,13 @@ class AppInfo:
     n_parts: int = 0
     parts_remaining: int = 0
     updated_at: float = 0.0            # tracker timestamp (liveness)
-    extra_hosts: Tuple[str, ...] = ()  # mirroring extension (paper §V)
+    # --- piece-wise swarm extension (paper §V, "torrent-like") ---------- #
+    # every node currently holding a complete, validated copy of the app
+    # image; the tracker keeps this sorted by reported seeder load so
+    # leechers default to the least-loaded holder
+    seeders: Tuple[str, ...] = ()
+    # metainfo for piece-wise image download (None => monolithic APP_DATA)
+    manifest: Optional["object"] = None
 
 
 @dataclass
@@ -40,3 +46,13 @@ RESULT = "RESULT"              # leecher -> host: R + measured (d, w)
 RESULT_ACK = "RESULT_ACK"      # host -> leecher: valid / invalid
 DROP_APP = "DROP_APP"          # server -> agents: A removed from list
 BYE = "BYE"                    # agent -> server: clean leave
+
+# --- piece-wise swarm extension (paper §V) ------------------------------ #
+HAVE = "HAVE"                  # peer -> peers: verified piece announcement
+PIECE_REQ = "PIECE_REQ"        # leecher -> holder: request one image piece
+PIECE_DATA = "PIECE_DATA"      # holder -> leecher: piece payload + proof
+SEEDER_UPDATE = "SEEDER_UPDATE"  # agent -> server (and relayed to seeders):
+                                 # node completed the image, joins seeder set
+PART_DONE = "PART_DONE"        # seeder <-> seeder: validated-part gossip
+PEER_GONE = "PEER_GONE"        # server -> agents: volunteer left/died;
+                                 # reclaim its leases immediately

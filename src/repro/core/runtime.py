@@ -47,9 +47,21 @@ class Node:
 class LinkModel:
     base_latency_s: float = 0.002
     bandwidth_Bps: float = 100e6 / 8 * 0.9   # ~100BASE-TX payload rate
+    # per-node uplink capacity; when set, a node's *bulk* sends serialise
+    # through its egress pipe (so a seeder fanning out to N leechers pays N
+    # transfer times, which is what makes swarm vs single-seeder
+    # measurable).  Control messages below the threshold interleave with
+    # bulk transfers, as packets do on a real link — otherwise a seeder's
+    # PONGs would queue behind multi-MB pieces and the tracker would
+    # declare it dead.
+    uplink_Bps: Optional[float] = None
+    bulk_threshold_bytes: int = 1 << 16
 
     def latency(self, size_bytes: int) -> float:
         return self.base_latency_s + size_bytes / self.bandwidth_Bps
+
+    def tx_time(self, size_bytes: int) -> float:
+        return size_bytes / (self.uplink_Bps or self.bandwidth_Bps)
 
 
 class Runtime:
@@ -83,6 +95,9 @@ class SimRuntime(Runtime):
         self._heap: List[Tuple[float, int, Callable[[], None]]] = []
         self._cancelled: set = set()
         self.speed: Dict[str, float] = {}
+        # per-node egress accounting and uplink-contention state
+        self.tx_bytes: Dict[str, int] = {}
+        self._uplink_free: Dict[str, float] = {}
         # processor-sharing executor state (per node): jobs share the core,
         # like the paper's clients running two app processes on one-core VMs
         self._ps_jobs: Dict[str, Dict[int, list]] = {}
@@ -101,8 +116,19 @@ class SimRuntime(Runtime):
         heapq.heappush(self._heap, (t, next(self._seq), fn))
 
     def send(self, dst: str, msg: Msg) -> None:
-        lat = self.link.latency(msg.size_bytes)
-        self._at(self._t + lat, lambda: self._deliver(dst, msg))
+        src = msg.src
+        self.tx_bytes[src] = self.tx_bytes.get(src, 0) + msg.size_bytes
+        if (self.link.uplink_Bps is not None
+                and msg.size_bytes >= self.link.bulk_threshold_bytes):
+            # serialise through the sender's uplink: the transfer starts
+            # once earlier transfers from this node have drained
+            start = max(self._t, self._uplink_free.get(src, 0.0))
+            done = start + self.link.tx_time(msg.size_bytes)
+            self._uplink_free[src] = done
+            at = done + self.link.base_latency_s
+        else:
+            at = self._t + self.link.latency(msg.size_bytes)
+        self._at(at, lambda: self._deliver(dst, msg))
 
     def _deliver(self, dst: str, msg: Msg) -> None:
         node = self.nodes.get(dst)

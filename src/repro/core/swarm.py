@@ -69,6 +69,21 @@ def plan_broadcast(n_nodes: int, n_pieces: int, fanout: int = 1,
     return plan
 
 
+def rarest_first_order(missing: Sequence[int], avail: Dict[int, int],
+                       offset: int = 0) -> List[int]:
+    """Order `missing` pieces by swarm-wide availability, rarest first.
+
+    The same policy `plan_broadcast` applies offline; the live agent
+    protocol (core/agent.py) feeds it HAVE-derived holder counts to pick
+    which piece to request next.  `offset` rotates the tie-break so equal-
+    rarity pieces are picked starting from different positions per caller
+    (deterministic random-first-piece).
+    """
+    n = max(len(missing), 1)
+    return sorted(missing, key=lambda p: (avail.get(p, 0), (p + offset) % n,
+                                          p))
+
+
 def rounds_of(plan: Sequence[Transfer]) -> int:
     return max((t.round for t in plan), default=0)
 

@@ -1,4 +1,4 @@
-"""Tracking server (paper §III.C-E, Fig. 2).
+"""Tracking server (paper §III.C-E, Fig. 2; §V swarm extension).
 
 Three modules:
   * connection module  — procedures PING, PUSH, RECV
@@ -13,6 +13,15 @@ framework's multi-pod job coordinator (cluster/coordinator.py).
 Liveness (§III.D): a host's rows survive only while the host keeps updating
 within `t` seconds, for at most `f` missed checks; after that the rows are
 dropped and a DROP_APP notice fans out so leechers STOP dependent work.
+
+The §V extension makes the server a real torrent tracker: each row carries
+the full *seeder set* (every volunteer holding a validated copy of the app
+image), ordered least-loaded-first from STATUS-reported lease counts so new
+leechers are routed to the least-loaded seeder.  When a host dies but
+replica seeders remain, the row is not dropped — the least-loaded live
+replica is promoted to host and the application survives.  Volunteer exits
+(BYE or missed pings) additionally fan out PEER_GONE so seeders reclaim the
+leaver's leases immediately instead of waiting for TAIL timeouts.
 """
 from __future__ import annotations
 
@@ -20,8 +29,9 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Set
 
-from repro.core.messages import (APP_LIST, BYE, DROP_APP, PING, PONG,
-                                 REGISTER, STATUS, AppInfo, Msg)
+from repro.core.messages import (APP_LIST, BYE, DROP_APP, HAVE, PEER_GONE,
+                                 PING, PONG, REGISTER, SEEDER_UPDATE,
+                                 STATUS, AppInfo, Msg)
 from repro.core.runtime import Node, Runtime
 
 
@@ -48,6 +58,10 @@ class TrackerServer(Node):
         self._init_cache: List[AppInfo] = []
         self._init_cache_at: float = -1e9
         self.log: List[tuple] = []
+        # per-app seeder load (active lease counts) from STATUS reports
+        self.seeder_load: Dict[str, Dict[str, int]] = {}
+        # per-app swarm membership (volunteers announcing via HAVE)
+        self.swarms: Dict[str, Set[str]] = {}
 
     # ------------------------------------------------------------------ #
     def start(self, rt: Runtime) -> None:
@@ -88,7 +102,16 @@ class TrackerServer(Node):
             self.VAL(msg.src, msg, alive=True)
             self.INIT(msg.src)
         elif msg.kind == STATUS:
+            # a STATUS from a volunteer we dropped (e.g. a ping false
+            # positive under congestion) re-admits it
+            self.members.add(msg.src)
             self.VAL(msg.src, msg, alive=True)
+            for app_id, n in msg.payload.get("loads", {}).items():
+                self.seeder_load.setdefault(app_id, {})[msg.src] = n
+        elif msg.kind == SEEDER_UPDATE:
+            self._on_seeder_update(msg)
+        elif msg.kind == HAVE:
+            self._on_have(msg)
         elif msg.kind == BYE:
             self.VAL(msg.src, msg, alive=False)
 
@@ -121,14 +144,71 @@ class TrackerServer(Node):
                                  {"apps": list(self._init_cache)},
                                  size_bytes=256 + 64 * len(self._init_cache)))
 
+    def _on_have(self, msg: Msg) -> None:
+        """Swarm announce: volunteers report verified pieces (or join with
+        an empty list); the tracker relays so peers discover each other —
+        its classic BitTorrent announce role."""
+        app_id = msg.payload["app_id"]
+        swarm = self.swarms.setdefault(app_id, set())
+        swarm.add(msg.src)
+        row = self.app_list.get(app_id)
+        targets = set(swarm)
+        if row is not None:
+            targets |= set(row.seeders) | {row.host_id}
+        relay = Msg(HAVE, self.node_id,
+                    {"app_id": app_id, "pieces": msg.payload["pieces"],
+                     "peer": msg.src}, size_bytes=96)
+        for t in targets - {msg.src, self.node_id}:
+            self.rt.send(t, relay)
+
+    def _on_seeder_update(self, msg: Msg) -> None:
+        """A volunteer finished (and verified) an app image: add it to the
+        seeder set and let the existing seeders sync it up."""
+        app_id = msg.payload["app_id"]
+        seeder = msg.payload["seeder"]
+        row = self.app_list.get(app_id)
+        if row is None or seeder in self.blocklist:
+            return
+        if seeder not in row.seeders:
+            row.seeders = tuple(row.seeders) + (seeder,)
+            row.updated_at = self.rt.now()
+            relay = Msg(SEEDER_UPDATE, self.node_id,
+                        {"app_id": app_id, "seeder": seeder}, size_bytes=96)
+            for peer in set(row.seeders) | {row.host_id}:
+                if peer not in (seeder, self.node_id):
+                    self.rt.send(peer, relay)
+            self.PUSH()
+
     def INFO(self, change: str, data) -> None:
         """Forward availability/update changes to the synchronizer."""
         if change == "upsert":
             self.WRITE(data)
         elif change == "drop_host":
-            dropped = [a for a in self.app_list.values()
-                       if a.host_id == data]
-            self.members.discard(data)
+            member = data
+            self.members.discard(member)
+            self.missed.pop(member, None)
+            for loads in self.seeder_load.values():
+                loads.pop(member, None)
+            for swarm in self.swarms.values():
+                swarm.discard(member)
+            dropped, promoted = [], []
+            for row in list(self.app_list.values()):
+                if member in row.seeders:
+                    row.seeders = tuple(s for s in row.seeders
+                                        if s != member)
+                if row.host_id != member:
+                    continue
+                live = [s for s in row.seeders if s in self.members]
+                if live:
+                    # replica failover: promote the least-loaded live
+                    # seeder instead of killing the application
+                    load = self.seeder_load.get(row.app_id, {})
+                    row.host_id = min(live,
+                                      key=lambda s: (load.get(s, 0), s))
+                    row.updated_at = self.rt.now()
+                    promoted.append(row)
+                else:
+                    dropped.append(row)
             for row in dropped:
                 del self.app_list[row.app_id]
             if dropped:
@@ -137,14 +217,36 @@ class TrackerServer(Node):
                            size_bytes=128)
                 for m in self.members:
                     self.rt.send(m, note)
+            # leavers' leases are reclaimed immediately at every seeder
+            gone = Msg(PEER_GONE, self.node_id, {"node": member},
+                       size_bytes=64)
+            for m in self.members:
+                self.rt.send(m, gone)
+            if promoted:
+                self.PUSH()
 
     # ======================= synchronizer module ======================= #
     def WRITE(self, row: AppInfo) -> None:
         row.updated_at = self.rt.now()
+        prev = self.app_list.get(row.app_id)
+        if prev is not None:
+            # the seeder set is tracker-owned state: merge, don't clobber
+            merged = set(prev.seeders) | set(row.seeders) | {row.host_id}
+            row.seeders = tuple(s for s in sorted(merged)
+                                if s == row.host_id or s in self.members)
+            if row.manifest is None:
+                row.manifest = prev.manifest
+        elif row.host_id not in row.seeders:
+            row.seeders = tuple(row.seeders) + (row.host_id,)
         self.app_list[row.app_id] = row
 
     def READ(self) -> List[AppInfo]:
-        return list(self.app_list.values())
+        rows = list(self.app_list.values())
+        for row in rows:
+            load = self.seeder_load.get(row.app_id, {})
+            row.seeders = tuple(sorted(
+                row.seeders, key=lambda s: (load.get(s, 0), s)))
+        return rows
 
     # ------------------------------------------------------------------ #
     def on_message(self, msg: Msg) -> None:

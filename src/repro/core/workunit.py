@@ -1,14 +1,141 @@
-"""Applications, parts and leases.
+"""Applications, parts, pieces and leases.
 
 An Application is split into parts ("cycles" in the paper's tests); the host
 leases parts to leechers, tracks them via TAIL, and re-DISTs on timeout.
 Leases are also the framework's unit of data-pipeline fault tolerance.
+
+The paper's §V extension adds a second axis of division: the application
+*image* itself is broken into fixed-size, content-hashed pieces described by
+a `PieceManifest` (metainfo, like a .torrent file).  Volunteers track their
+holdings in a `PieceInventory`, verify every piece against the manifest, and
+any volunteer with a complete image may re-seed it.  Executables are resolved
+through a registry keyed by the manifest hash — possession of the verified
+image is what grants the right to look up and run the code, replacing any
+side-channel between nodes.
 """
 from __future__ import annotations
 
+import functools
+import hashlib
 import itertools
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+
+
+def _hash(*fields: object) -> str:
+    h = hashlib.sha1()
+    for f in fields:
+        h.update(str(f).encode())
+        h.update(b"\0")
+    return h.hexdigest()
+
+
+@dataclass(frozen=True)
+class PieceManifest:
+    """Metainfo for piece-wise image distribution (paper §V).
+
+    Mirrors a .torrent info dict: piece size, piece count and per-piece
+    content hashes.  `manifest_hash` (the info-hash) identifies the exact
+    application image and keys the executable registry.
+    """
+    app_id: str
+    piece_bytes: int
+    total_bytes: int
+    piece_hashes: Tuple[str, ...]
+
+    @property
+    def n_pieces(self) -> int:
+        return len(self.piece_hashes)
+
+    @functools.cached_property
+    def manifest_hash(self) -> str:
+        return _hash(self.app_id, self.piece_bytes, self.total_bytes,
+                     *self.piece_hashes)
+
+    def piece_size(self, piece_id: int) -> int:
+        if piece_id < self.n_pieces - 1:
+            return self.piece_bytes
+        rem = self.total_bytes - self.piece_bytes * (self.n_pieces - 1)
+        return max(rem, 0)
+
+    @classmethod
+    def from_bytes(cls, app_id: str, image: bytes,
+                   piece_bytes: int) -> "PieceManifest":
+        hashes = tuple(
+            hashlib.sha1(image[i:i + piece_bytes]).hexdigest()
+            for i in range(0, max(len(image), 1), piece_bytes))
+        return cls(app_id, piece_bytes, len(image), hashes)
+
+    @classmethod
+    def synthetic(cls, app_id: str, total_bytes: int,
+                  piece_bytes: int) -> "PieceManifest":
+        """Manifest for a simulated image: hashes are derived, no bytes are
+        materialised (benchmarks use multi-GB images)."""
+        n = max(1, -(-total_bytes // max(piece_bytes, 1)))
+        hashes = tuple(_hash(app_id, total_bytes, i) for i in range(n))
+        return cls(app_id, piece_bytes, total_bytes, hashes)
+
+
+class PieceInventory:
+    """Which pieces of one application image a volunteer holds (verified)."""
+
+    def __init__(self, manifest: PieceManifest,
+                 complete: bool = False):
+        self.manifest = manifest
+        self.have: Set[int] = (set(range(manifest.n_pieces)) if complete
+                               else set())
+
+    def add(self, piece_id: int, proof: str) -> bool:
+        """Verify `proof` against the manifest; reject corrupt pieces."""
+        if not (0 <= piece_id < self.manifest.n_pieces):
+            return False
+        if proof != self.manifest.piece_hashes[piece_id]:
+            return False
+        self.have.add(piece_id)
+        return True
+
+    def has(self, piece_id: int) -> bool:
+        return piece_id in self.have
+
+    def missing(self) -> List[int]:
+        return [i for i in range(self.manifest.n_pieces)
+                if i not in self.have]
+
+    @property
+    def complete(self) -> bool:
+        return len(self.have) == self.manifest.n_pieces
+
+    def bitfield(self) -> Tuple[int, ...]:
+        return tuple(sorted(self.have))
+
+
+# --------------------------------------------------------------------------- #
+# Executable registry: manifest hash -> runnable code + app blueprint.
+#
+# In a real deployment the verified image *is* the executable; in this
+# in-process reproduction the registry stands in for "unpacking the image".
+# An agent may only resolve a hash for an image it has fully verified, which
+# removes the old back-door of reaching into the runtime's node table.
+_EXECUTABLES: Dict[str, "ExecutableEntry"] = {}
+
+
+@dataclass
+class ExecutableEntry:
+    run_fn: Optional[Callable[[Any], Any]]
+    cost_fn: Optional[Callable[[Any, float], float]]
+    blueprint: Optional[Callable[[], "Application"]] = None
+
+
+def register_executable(manifest_hash: str,
+                        run_fn: Optional[Callable[[Any], Any]],
+                        cost_fn: Optional[Callable[[Any, float], float]],
+                        blueprint: Optional[Callable[[], "Application"]] = None
+                        ) -> None:
+    _EXECUTABLES[manifest_hash] = ExecutableEntry(run_fn, cost_fn, blueprint)
+
+
+def resolve_executable(manifest_hash: str) -> Optional[ExecutableEntry]:
+    return _EXECUTABLES.get(manifest_hash)
 
 
 @dataclass
@@ -31,6 +158,34 @@ class Application:
     parts: List[Part] = field(default_factory=list)
     m_min: int = 1
     m_max: int = 1
+    # piece-wise distribution (paper §V): when `swarm` is set the image is
+    # advertised via the manifest and moves as hashed pieces between
+    # volunteers instead of riding on every APP_DATA
+    swarm: bool = False
+    piece_bytes: int = 1 << 16
+    manifest: Optional[PieceManifest] = None
+
+    def ensure_manifest(self) -> PieceManifest:
+        if self.manifest is None:
+            self.manifest = PieceManifest.synthetic(
+                self.app_id, self.app_bytes,
+                self.piece_bytes if self.swarm else max(self.app_bytes, 1))
+        return self.manifest
+
+    def blueprint(self) -> Callable[[], "Application"]:
+        """Factory reconstructing this application from its image: fresh
+        parts, same executables — what a replica seeder unpacks."""
+        spec = [(p.part_id, p.payload, p.data_bytes) for p in self.parts]
+
+        def make() -> "Application":
+            return Application(
+                self.app_id, self.host_id, run_fn=self.run_fn,
+                cost_fn=self.cost_fn, app_bytes=self.app_bytes,
+                parts=[Part(pid, payload, data_bytes=db)
+                       for pid, payload, db in spec],
+                m_min=self.m_min, m_max=self.m_max, swarm=self.swarm,
+                piece_bytes=self.piece_bytes, manifest=self.manifest)
+        return make
 
     def pending_parts(self, leased: Dict[int, list]) -> List[Part]:
         out = []
@@ -103,7 +258,9 @@ class LeaseTable:
 def make_prime_app(app_id: str, host_id: str, lo: int, hi: int,
                    n_parts: int, *, app_bytes: int = 4096,
                    part_data_bytes: int = 4096, m_min: int = 1,
-                   sim_time_per_number: float = 2.5e-3) -> Application:
+                   sim_time_per_number: float = 2.5e-3,
+                   swarm: bool = False,
+                   piece_bytes: int = 1 << 16) -> Application:
     """The paper's test application: prime search by exhaustion."""
     bounds = []
     step = (hi - lo) / n_parts
@@ -124,7 +281,8 @@ def make_prime_app(app_id: str, host_id: str, lo: int, hi: int,
              for i in range(n_parts)]
     return Application(app_id, host_id, run_fn=run_fn, cost_fn=cost_fn,
                        app_bytes=app_bytes, parts=parts, m_min=m_min,
-                       m_max=max(m_min, 1))
+                       m_max=max(m_min, 1), swarm=swarm,
+                       piece_bytes=piece_bytes)
 
 
 def find_primes(lo: int, hi: int) -> list:

@@ -1,10 +1,12 @@
 """Property-based tests (hypothesis) on system invariants."""
 import collections
 
-import hypothesis.strategies as st
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+hypothesis = pytest.importorskip("hypothesis")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.core.metrics import AppMetrics
 from repro.core.swarm import naive_rounds, plan_broadcast, rounds_of
