@@ -276,8 +276,98 @@ def scenario_v(verbose: bool = True, n_volunteers: int = 12,
     return res
 
 
+def _duplicate_execs(agents, app_id: str, m_min: int) -> int:
+    """Completed part executions beyond the m_min the quorum needs,
+    summed over parts (the waste endgame PART_CANCEL exists to cap)."""
+    import collections as _c
+    per_part = _c.Counter(part_id for a in agents
+                          for (_, aid, part_id) in a.results_log
+                          if aid == app_id)
+    return sum(max(0, n - m_min) for n in per_part.values())
+
+
+def scenario_vi(verbose: bool = True, n_volunteers: int = 24,
+                image_mb: float = 32.0, n_pieces: int = 16,
+                n_parts: int = 96, m_min: int = 2,
+                uplink_mbps: float = 100.0) -> dict:
+    """Scenario VI: the PieceExchange engine's choke scheduler + endgame.
+
+    Three swarm variants at N=24 with symmetric uplink/downlink
+    contention:
+
+      * baseline — PR 1 behaviour: no choking, no cancel messages;
+        duplicate part executions from seeders' drained partitions run to
+        completion and are wasted.
+      * unchoked — cancels on (PIECE_CANCEL/PART_CANCEL), choking off:
+        shows what endgame reconciliation alone buys.
+      * choked   — full engine: fixed upload slots + optimistic unchoke
+        on top of endgame cancels.
+
+    Reports origin egress, makespan and duplicate-execution counts.
+    """
+    from repro.core.runtime import LinkModel
+
+    image_bytes = int(image_mb * 1e6)
+    link_Bps = uplink_mbps * 1e6 / 8
+
+    def run(choke: bool, endgame: bool) -> dict:
+        rt = SimRuntime(link=LinkModel(uplink_Bps=link_Bps,
+                                       downlink_Bps=link_Bps))
+        rt.add_node(TrackerServer(config=TrackerConfig(ping_interval_s=2.0)))
+        cfg = dict(work_timeout_s=600.0, choke=choke, endgame=endgame,
+                   rechoke_interval_s=5.0)
+        host = Agent("host", config=AgentConfig(**cfg))
+        rt.add_node(host)
+        app = make_prime_app("appvi", "host", 3, 48_000, n_parts=n_parts,
+                             sim_time_per_number=1e-2, m_min=m_min,
+                             swarm=True, app_bytes=image_bytes,
+                             piece_bytes=image_bytes // n_pieces)
+        host.host_app(app)
+        agents = [host]
+        for i in range(n_volunteers):
+            a = Agent(f"V{i}", config=AgentConfig(**cfg))
+            # heterogeneous volunteers (cf. Scenario IV's mixed machine
+            # classes): a homogeneous swarm completes duplicate leases in
+            # lockstep, which no cancel message can race
+            rt.add_node(a, speed=1.0 - 0.4 * i / max(n_volunteers, 1))
+            agents.append(a)
+
+        def done():
+            return app.done or any(
+                a.apps.get("appvi") and a.apps["appvi"].done
+                for a in agents[1:])
+        rt.run(until=8 * H, stop_when=done)
+        return {"done": done(), "makespan_s": rt.now(),
+                "origin_up_mb": rt.tx_bytes.get("host", 0) / 1e6,
+                "dup_execs": _duplicate_execs(agents, "appvi", m_min),
+                "cancelled_parts": sum(a.cancelled_parts for a in agents),
+                "piece_cancels": sum(a.px.cancels_sent for a in agents)}
+
+    baseline = run(choke=False, endgame=False)   # PR 1 behaviour
+    unchoked = run(choke=False, endgame=True)
+    choked = run(choke=True, endgame=True)
+    res = {
+        "baseline": baseline, "unchoked": unchoked, "choked": choked,
+        "dup_exec_reduction": (baseline["dup_execs"]
+                               - choked["dup_execs"]),
+    }
+    if verbose:
+        for name in ("baseline", "unchoked", "choked"):
+            r = res[name]
+            print(f"[scenarioVI] {name}: makespan={r['makespan_s']:.0f}s "
+                  f"origin_up={r['origin_up_mb']:.0f}MB "
+                  f"dup_execs={r['dup_execs']} "
+                  f"cancelled={r['cancelled_parts']} "
+                  f"piece_cancels={r['piece_cancels']} "
+                  f"done={r['done']}")
+        print(f"[scenarioVI] endgame cancels cut duplicate executions by "
+              f"{res['dup_exec_reduction']} vs the no-cancel baseline")
+    return res
+
+
 ALL_TABLES = {"table1": table1, "table2": table2, "table3": table3,
-              "table4": table4, "scenario_v": scenario_v}
+              "table4": table4, "scenario_v": scenario_v,
+              "scenario_vi": scenario_vi}
 
 if __name__ == "__main__":
     for name, fn in ALL_TABLES.items():

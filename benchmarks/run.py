@@ -31,6 +31,13 @@ def main() -> None:
             derived = (f"origin_bytes/{res['origin_bytes_reduction']:.0f} "
                        f"makespan_x{res['makespan_speedup']:.0f} "
                        f"failover_done={res['failover']['done']}")
+        elif name == "scenario_vi":
+            derived = (f"dup_execs {res['baseline']['dup_execs']}->"
+                       f"{res['choked']['dup_execs']} origin_up "
+                       f"{res['baseline']['origin_up_mb']:.0f}MB->"
+                       f"{res['choked']['origin_up_mb']:.0f}MB "
+                       f"makespan {res['baseline']['makespan_s']:.0f}s->"
+                       f"{res['choked']['makespan_s']:.0f}s")
         else:
             derived = (f"speedup1={res['speedup_app1']:.2f}(3.5) "
                        f"speedup2={res['speedup_app2']:.2f}(3.3)")

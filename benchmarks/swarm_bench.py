@@ -15,8 +15,9 @@ from repro.parallel.weight_torrent import broadcast_cost_model
 
 def bench_live(verbose: bool = True, n_volunteers: int = 8,
                image_mb: float = 32.0):
-    """Scenario V through the real protocol (smaller than paper_tables')."""
-    from benchmarks.paper_tables import scenario_v
+    """Scenarios V + VI through the real protocol (smaller than
+    paper_tables' defaults)."""
+    from benchmarks.paper_tables import scenario_v, scenario_vi
     res = scenario_v(verbose=False, n_volunteers=n_volunteers,
                      image_mb=image_mb, n_pieces=16, n_parts=24)
     rows = [{
@@ -27,17 +28,41 @@ def bench_live(verbose: bool = True, n_volunteers: int = 8,
                     f"makespan {res['single']['makespan_s']:.0f}s->"
                     f"{res['swarm']['makespan_s']:.0f}s "
                     f"failover_done={res['failover']['done']}"),
+        "metrics": {"origin_up_mb": res["swarm"]["origin_up_mb"],
+                    "makespan_s": res["swarm"]["makespan_s"],
+                    "failover_done": res["failover"]["done"]},
     }]
+    # choke/endgame effects need a few seeders' worth of swarm: below ~8
+    # volunteers the duplicate-execution counts are dominated by noise
+    n_vi = max(n_volunteers, 8)
+    vi = scenario_vi(verbose=False, n_volunteers=n_vi,
+                     image_mb=image_mb, n_pieces=16, n_parts=4 * n_vi)
+    rows.append({
+        "name": f"swarm_choke_n{n_vi}_img{int(image_mb)}MB",
+        "us_per_call": 0.0,
+        "derived": (f"dup_execs {vi['baseline']['dup_execs']}->"
+                    f"{vi['choked']['dup_execs']} origin_up "
+                    f"{vi['baseline']['origin_up_mb']:.0f}MB->"
+                    f"{vi['choked']['origin_up_mb']:.0f}MB "
+                    f"makespan {vi['baseline']['makespan_s']:.0f}s->"
+                    f"{vi['choked']['makespan_s']:.0f}s"),
+        "metrics": {k: {"makespan_s": vi[k]["makespan_s"],
+                        "origin_up_mb": vi[k]["origin_up_mb"],
+                        "dup_execs": vi[k]["dup_execs"],
+                        "done": vi[k]["done"]}
+                    for k in ("baseline", "unchoked", "choked")},
+    })
     if verbose:
         for r in rows:
             print(f"[swarm] {r['name']}: {r['derived']}")
     return rows
 
 
-def bench(verbose: bool = True):
+def bench(verbose: bool = True, smoke: bool = False):
     rows = []
-    for n_nodes, n_pieces in [(8, 8), (16, 16), (64, 64), (256, 64),
-                              (1024, 128)]:
+    plan_cases = [(8, 8), (16, 16), (64, 64)] if smoke else \
+        [(8, 8), (16, 16), (64, 64), (256, 64), (1024, 128)]
+    for n_nodes, n_pieces in plan_cases:
         t0 = time.perf_counter()
         plan = plan_broadcast(n_nodes, n_pieces, fanout=1)
         dt = (time.perf_counter() - t0) * 1e6
@@ -60,8 +85,28 @@ def bench(verbose: bool = True):
     if verbose:
         for r in rows:
             print(f"[swarm] {r['name']}: {r['derived']}")
-    rows += bench_live(verbose=verbose)
+    rows += bench_live(verbose=verbose,
+                       n_volunteers=6 if smoke else 8,
+                       image_mb=16.0 if smoke else 32.0)
     return rows
+
+
+def main(argv=None) -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced scale for CI")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write rows as JSON (perf trajectory artifact)")
+    args = ap.parse_args(argv)
+    rows = bench(smoke=args.smoke)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "swarm", "smoke": args.smoke,
+                       "rows": rows}, f, indent=2, default=str)
+        print(f"[swarm] wrote {args.json}")
 
 
 if __name__ == "__main__":
@@ -69,4 +114,4 @@ if __name__ == "__main__":
     import sys
     sys.path.insert(0, os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))))
-    bench()
+    main()

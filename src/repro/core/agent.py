@@ -13,14 +13,17 @@ The §V extension ("broken to pieces like regular file sharing in torrent")
 adds a third role when an application is published with `swarm=True`:
 
   * a PIECE PEER: the app image moves as hashed pieces (PIECE_REQ /
-    PIECE_DATA), chosen rarest-first from HAVE announcements — the same
-    policy core/swarm.py's offline planner uses.  Verified pieces are
-    announced (HAVE) and served to other leechers while crunching.  Once the
-    image completes, the agent resolves the executable from the registry
-    keyed by the manifest hash (no back-door into the runtime's node table)
-    and becomes a REPLICA SEEDER: it answers REQ/DIST and VALidates results
-    for the app, keeps in sync with the other seeders via PART_DONE gossip,
-    and can be promoted to host by the tracker if the origin dies.
+    PIECE_DATA), scheduled by the PieceExchange engine
+    (core/piece_exchange.py): rarest-first selection from HAVE bitmask
+    announcements, seeder-side choke scheduling (INTERESTED/CHOKE/UNCHOKE,
+    fixed upload slots, optimistic unchoke) and endgame duplicate requests
+    reconciled with PIECE_CANCEL.  Once the image completes, the agent
+    resolves the executable from the registry keyed by the manifest hash
+    (no back-door into the runtime's node table) and becomes a REPLICA
+    SEEDER: it answers REQ/DIST and VALidates results for the app, keeps
+    in sync with the other seeders via PART_DONE gossip (cancelling now-
+    redundant leases with PART_CANCEL), and can be promoted to host by the
+    tracker if the origin dies.
 
 The dual Seed/ and Leech/ working directories (Fig. 3) are managed by
 core.directory; TAIL's volunteer log lives under Seed/App/<id>/Data/Tracker
@@ -30,20 +33,20 @@ from __future__ import annotations
 
 import collections
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+from typing import Any, Callable, Dict, List, Optional, Set
 
 from repro.core import directory as dirs
-from repro.core.messages import (APP_DATA, APP_LIST, BYE, DROP_APP, HAVE,
-                                 NO_WORK, PART_DONE, PEER_GONE, PIECE_DATA,
-                                 PIECE_REQ, PING, PONG, REGISTER, REQ,
-                                 RESULT, RESULT_ACK, SEEDER_UPDATE, STATUS,
-                                 AppInfo, Msg)
+from repro.core.messages import (APP_DATA, APP_LIST, BYE, CHOKE, DROP_APP,
+                                 HAVE, INTERESTED, NO_WORK, PART_CANCEL,
+                                 PART_DONE, PEER_GONE, PIECE_CANCEL,
+                                 PIECE_DATA, PIECE_REQ, PING, PONG, REGISTER,
+                                 REQ, RESULT, RESULT_ACK, SEEDER_UPDATE,
+                                 STATUS, UNCHOKE, AppInfo, Msg)
 from repro.core.metrics import AppMetrics
-from repro.core.runtime import Node, Runtime
-from repro.core.swarm import rarest_first_order
+from repro.core.piece_exchange import PieceExchange
+from repro.core.runtime import CANCELLED, Node, Runtime
 from repro.core.validation import majority_vote
 from repro.core.workunit import (Application, LeaseTable, Part,
-                                 PieceInventory, PieceManifest,
                                  register_executable, resolve_executable)
 
 
@@ -62,6 +65,13 @@ class AgentConfig:
     root_dir: Optional[str] = None      # enables on-disk Fig. 3 layout
     piece_pipeline: int = 4             # outstanding PIECE_REQs per app
     replica_seed: bool = True           # re-seed completed swarm images
+    # --- PieceExchange choke scheduler / endgame ----------------------- #
+    choke: bool = True                  # seeder-side upload-slot limiting
+    upload_slots: int = 4               # unchoked peers per app
+    rechoke_interval_s: float = 10.0    # periodic re-choke cadence
+    optimistic_every: int = 3           # rotate optimistic slot every N
+    endgame: bool = True                # dup requests + CANCEL reconcile
+    endgame_dup: int = 3                # max concurrent holders per piece
 
 
 class Agent(Node):
@@ -82,6 +92,11 @@ class Agent(Node):
         self.app_list: List[AppInfo] = []
         self.current: Dict[str, dict] = {}             # app_id -> work ctx
         self.results_log: List[tuple] = []
+        self.part_results: Dict[tuple, Any] = {}       # (app, part) -> R
+        # voters whose result for a part passed through this seeder (kept
+        # even when the result is forwarded to the part's owner, so DIST
+        # never re-grants a part to a volunteer that already voted)
+        self.voted: Dict[tuple, Set[str]] = collections.defaultdict(set)
         self.completed_cycles: Dict[str, int] = collections.defaultdict(int)
         self.leech_time: Dict[str, float] = collections.defaultdict(float)
         self.leech_bytes: Dict[str, float] = collections.defaultdict(float)
@@ -89,21 +104,36 @@ class Agent(Node):
         self.dry_until: Dict[str, float] = {}
         self.completed_at: Dict[str, float] = {}
         self.no_work_from: Dict[str, Set[str]] = collections.defaultdict(set)
-        # --- piece-peer state (paper §V) ----------------------------------
-        self.manifests: Dict[str, PieceManifest] = {}
-        self.inventories: Dict[str, PieceInventory] = {}
-        self.images: Dict[str, str] = {}        # app_id -> verified manifest
-        self.full_seeders: Dict[str, Set[str]] = collections.defaultdict(set)
-        self.peer_pieces: Dict[str, Dict[str, Set[int]]] = \
-            collections.defaultdict(dict)       # app -> partial holders
-        self.swarm_peers: Dict[str, Set[str]] = collections.defaultdict(set)
-        self.piece_pending: Dict[str, Dict[int, tuple]] = \
-            collections.defaultdict(dict)       # app -> piece -> (peer, t)
-        self.peer_load: Dict[str, int] = collections.defaultdict(int)
-        self.bad_piece_peers: Dict[str, Set[str]] = \
-            collections.defaultdict(set)
+        self.cancelled_parts = 0                # PART_CANCEL aborts
         self.dir = (dirs.AgentDirs(self.cfg.root_dir, node_id)
                     if self.cfg.root_dir else None)
+        # --- piece-peer state (paper §V): the PieceExchange engine --------
+        self.images: Dict[str, str] = {}        # app_id -> verified manifest
+        self.px = PieceExchange(
+            node_id, self.cfg, send=self.SEND, now=lambda: self.rt.now(),
+            tracker_id=server_id, dirs=self.dir,
+            on_image_complete=self._on_image_complete,
+            on_bytes=self._on_piece_bytes)
+
+    def _on_piece_bytes(self, app_id: str, nbytes: int) -> None:
+        self.leech_bytes[app_id] += nbytes
+
+    # engine views kept for tests/tools (the engine owns the state)
+    @property
+    def manifests(self):
+        return self.px.manifests
+
+    @property
+    def inventories(self):
+        return self.px.inventories
+
+    @property
+    def swarm_peers(self):
+        return self.px.swarm_peers
+
+    @property
+    def full_seeders(self):
+        return self.px.full_seeders
 
     # ------------------------------------------------------------------ #
     def host_app(self, app: Application) -> None:
@@ -114,13 +144,13 @@ class Agent(Node):
         register_executable(manifest.manifest_hash, app.run_fn, app.cost_fn,
                             blueprint=app.blueprint())
         self.apps[app.app_id] = app
-        self.manifests[app.app_id] = manifest
+        self.px.add_local_app(app.app_id, manifest, image=app.image)
         self.images[app.app_id] = manifest.manifest_hash
         self.tails[app.app_id] = LeaseTable(self.cfg.work_timeout_s)
         m = AppMetrics(d_app_bytes=app.app_bytes, m_min=app.m_min)
         self.metrics[app.app_id] = m
         if self.dir:
-            self.dir.seed_app(app.app_id, app.app_bytes)
+            self.dir.seed_app(app.app_id, app.app_bytes, image=app.image)
 
     def start(self, rt: Runtime) -> None:
         super().start(rt)
@@ -130,6 +160,9 @@ class Agent(Node):
                      periodic=True)
         rt.set_timer(self.node_id, "tail", self.cfg.work_timeout_s / 2,
                      periodic=True)
+        if self.cfg.choke:
+            rt.set_timer(self.node_id, "rechoke",
+                         self.cfg.rechoke_interval_s, periodic=True)
 
     def shutdown(self) -> None:
         """Graceful leave: BYE tells the server to reclaim this volunteer's
@@ -152,13 +185,16 @@ class Agent(Node):
         return rows
 
     def _seed_loads(self) -> Dict[str, int]:
-        """Active lease counts for every app this node seeds (origin or
-        replica); the tracker uses them for least-loaded routing."""
+        """Per-app seeding pressure: active lease counts plus the choke
+        scheduler's upload load (granted slots + queued piece requests);
+        the tracker uses them for least-loaded routing."""
         loads = {}
         for app_id in list(self.apps) + list(self.replicas):
             tail = self.tails.get(app_id)
             if tail is not None:
-                loads[app_id] = sum(len(ls) for ls in tail.active().values())
+                loads[app_id] = (sum(len(ls)
+                                     for ls in tail.active().values())
+                                 + self.px.seed_load(app_id))
         return loads
 
     # ========================== connector =============================== #
@@ -188,17 +224,35 @@ class Agent(Node):
         elif kind == RESULT_ACK:
             self._on_result_ack(msg)
         elif kind == HAVE:
-            self._on_have(msg)
+            self.px.on_have(msg)
         elif kind == PIECE_REQ:
             self._on_piece_req(msg)
         elif kind == PIECE_DATA:
-            self._on_piece_data(msg)
+            self.px.on_piece_data(msg)
+        elif kind == INTERESTED:
+            self.px.on_interested(msg)
+        elif kind == CHOKE:
+            self.px.on_choke(msg)
+        elif kind == UNCHOKE:
+            self.px.on_unchoke(msg)
+        elif kind == PIECE_CANCEL:
+            self.px.on_piece_cancel(msg)
+        elif kind == PART_CANCEL:
+            self._on_part_cancel(msg)
         elif kind == PART_DONE:
             self._on_part_done(msg)
         elif kind == PEER_GONE:
             self._on_peer_gone(msg.payload["node"])
         elif kind == SEEDER_UPDATE:
             self._on_seeder_update(msg)
+
+    def _on_piece_req(self, msg: Msg) -> None:
+        # kept as a seam (tests stub a malicious serving path here); the
+        # engine owns the real choke-aware serving logic
+        self.px.on_piece_req(msg)
+
+    def _our_bitfield(self, app_id: str) -> int:
+        return self.px.bitfield_mask(app_id)
 
     def SEND(self, dst: str, msg: Msg) -> None:
         self.rt.send(dst, msg)
@@ -216,6 +270,18 @@ class Agent(Node):
     def _seeded_app(self, app_id: str) -> Optional[Application]:
         return self.apps.get(app_id) or self.replicas.get(app_id)
 
+    def _seeder_ring(self, app_id: str) -> List[str]:
+        row = self._row_for(app_id)
+        return sorted(set(row.seeders if row else ()) | {self.node_id})
+
+    def _part_owner(self, app_id: str, part_id: int) -> str:
+        """The seeder responsible for a part: the owner of the partition
+        `_partition_pending` assigns it to.  Results for the part converge
+        there so the m_min quorum forms at one place even when endgame
+        leases scatter across seeders."""
+        seeders = self._seeder_ring(app_id)
+        return seeders[part_id % len(seeders)]
+
     def _partition_pending(self, app: Application,
                            pending: List[Part]) -> List[Part]:
         """Split the part space across the current seeder set so concurrent
@@ -223,8 +289,7 @@ class Agent(Node):
         list when this seeder's partition is drained (endgame)."""
         if not app.swarm:
             return pending
-        row = self._row_for(app.app_id)
-        seeders = sorted(set(row.seeders if row else ()) | {self.node_id})
+        seeders = self._seeder_ring(app.app_id)
         if len(seeders) <= 1:
             return pending
         idx = seeders.index(self.node_id)
@@ -239,13 +304,27 @@ class Agent(Node):
                                      {"app_id": app_id}, size_bytes=64))
             return
         tail = self.tails[app_id]
-        pending = self._partition_pending(app,
-                                          app.pending_parts(tail.active()))
+        active = tail.active()
+        pending = self._partition_pending(app, app.pending_parts(active))
         if not pending:
             self.SEND(volunteer, Msg(NO_WORK, self.node_id,
                                      {"app_id": app_id}, size_bytes=64))
             return
-        part = pending[0]
+        # skip parts this volunteer already contributed to (a result seen
+        # or forwarded here, or an active lease): a quorum needs
+        # *distinct* voters, and re-granting just burns a duplicate
+        # execution or spins a cached-resend loop
+        part = next(
+            (p for p in pending
+             if volunteer not in self.voted.get((app_id, p.part_id), ())
+             and not any(v == volunteer for v, _, _ in p.results)
+             and not any(l.volunteer_id == volunteer
+                         for l in active.get(p.part_id, []))),
+            None)
+        if part is None:
+            self.SEND(volunteer, Msg(NO_WORK, self.node_id,
+                                     {"app_id": app_id}, size_bytes=64))
+            return
         tail.grant(part.part_id, volunteer, self.rt.now())
         if self.dir:
             self.dir.tracker_log(app_id,
@@ -276,7 +355,13 @@ class Agent(Node):
                                        "loads": self._seed_loads()}))
 
     def VAL(self, msg: Msg) -> None:
-        """Validate a RESULT by majority voting once m_min results arrived."""
+        """Validate a RESULT by majority voting once m_min results arrived.
+
+        For swarm apps the quorum forms at the part's *owner* seeder:
+        another seeder that leased the part in endgame fallback forwards
+        the result there (ACKing its volunteer itself), so m_min is
+        reached promptly instead of results scattering one-per-seeder and
+        every seeder re-leasing the part."""
         app_id = msg.payload["app_id"]
         app = self._seeded_app(app_id)
         if app is None:
@@ -284,15 +369,52 @@ class Agent(Node):
         part_id = msg.payload["part_id"]
         part = app.parts[part_id]
         tail = self.tails[app_id]
-        tail.release(part_id, msg.src)
+        forwarded = msg.payload.get("forwarded", False)
+        volunteer = msg.payload.get("volunteer", msg.src)
+        tail.release(part_id, volunteer)
         if self.val_hook is not None and not self.val_hook(
                 part_id, msg.payload["result"]):
-            # malicious result: discard; status not updated (paper §III.D)
-            self.SEND(msg.src, Msg(RESULT_ACK, self.node_id,
-                                   {"app_id": app_id, "part_id": part_id,
-                                    "valid": False}, size_bytes=64))
+            # malicious result: discard; status not updated (paper §III.D).
+            # The rejected volunteer's vote is still *consumed* (recorded
+            # in `voted`), so DIST never re-grants it the same part — a
+            # cached resend would otherwise spin an unthrottled
+            # grant->resend->reject loop
+            self.voted[(app_id, part_id)].add(volunteer)
+            # always tell the *volunteer* (the forwarder already ACKed it
+            # optimistically): valid=False makes it drop its cached copy
+            # so the bad result is not replayed to other seeders
+            self.SEND(volunteer, Msg(RESULT_ACK, self.node_id,
+                                     {"app_id": app_id,
+                                      "part_id": part_id,
+                                      "valid": False}, size_bytes=64))
             return
-        part.results.append((msg.src, msg.payload["result"],
+        self.voted[(app_id, part_id)].add(volunteer)
+        if app.swarm and not forwarded and not part.done:
+            # seeder ring views may diverge briefly while the tracker
+            # propagates a new replica; a mis-routed forward is then
+            # simply validated at the receiver (never re-forwarded), and
+            # PART_DONE gossip re-converges the done sets
+            owner = self._part_owner(app_id, part_id)
+            if owner != self.node_id:
+                self.SEND(owner, Msg(RESULT, self.node_id,
+                                     {**msg.payload, "forwarded": True,
+                                      "volunteer": volunteer},
+                                     size_bytes=1024))
+                self.SEND(volunteer, Msg(RESULT_ACK, self.node_id,
+                                         {"app_id": app_id,
+                                          "part_id": part_id,
+                                          "valid": True}, size_bytes=64))
+                return
+        if any(v == volunteer for v, _, _ in part.results):
+            # duplicate vote (e.g. a cached resend routed via another
+            # seeder): m_min demands *distinct* voters
+            if not forwarded:
+                self.SEND(msg.src, Msg(RESULT_ACK, self.node_id,
+                                       {"app_id": app_id,
+                                        "part_id": part_id,
+                                        "valid": True}, size_bytes=64))
+            return
+        part.results.append((volunteer, msg.payload["result"],
                              msg.payload.get("time_s", 0.0)))
         if len(part.results) >= app.m_min and not part.done:
             winner, ok = majority_vote([r for _, r, _ in part.results],
@@ -305,6 +427,7 @@ class Agent(Node):
                         msg.payload.get("data_bytes", part.data_bytes),
                         msg.payload.get("time_s", 0.0),
                         app_downloaded=not app.swarm)
+                self._cancel_part_leases(app_id, part_id)
                 self.EVAL(app_id, True)
                 if self.dir:
                     self.dir.save_seed_result(app_id, part_id, winner)
@@ -314,9 +437,10 @@ class Agent(Node):
                     self.completed_at[app_id] = self.rt.now()
                 if app_id in self.apps:
                     self.STAT()
-        self.SEND(msg.src, Msg(RESULT_ACK, self.node_id,
-                               {"app_id": app_id, "part_id": part_id,
-                                "valid": True}, size_bytes=64))
+        if not forwarded:
+            self.SEND(msg.src, Msg(RESULT_ACK, self.node_id,
+                                   {"app_id": app_id, "part_id": part_id,
+                                    "valid": True}, size_bytes=64))
 
     def TAIL(self) -> None:
         """Expire overdue leases and re-DIST (straggler mitigation)."""
@@ -331,6 +455,46 @@ class Agent(Node):
                                          f"volunteer={lease.volunteer_id}")
                 # the paper drops the volunteer from the mapping list and
                 # redistributes on the next REQ; nothing else to do here
+
+    def _cancel_part_leases(self, app_id: str, part_id: int) -> None:
+        """Endgame reconciliation for *work*: a part just validated, so any
+        lease still outstanding for it (duplicate leasing happens when
+        seeder partitions drain) is redundant — release it and PART_CANCEL
+        the volunteer so the duplicate execution aborts."""
+        if not self.cfg.endgame:
+            return
+        tail = self.tails.get(app_id)
+        if tail is None:
+            return
+        for lease in list(tail.active().get(part_id, [])):
+            tail.release(part_id, lease.volunteer_id)
+            self.SEND(lease.volunteer_id,
+                      Msg(PART_CANCEL, self.node_id,
+                          {"app_id": app_id, "part_id": part_id},
+                          size_bytes=64))
+
+    def _on_part_cancel(self, msg: Msg) -> None:
+        """The part this volunteer is crunching was validated elsewhere:
+        abort the (now redundant) execution and move on to fresh work."""
+        app_id = msg.payload["app_id"]
+        part_id = msg.payload["part_id"]
+        ctx = self.current.get(app_id)
+        if ctx is None or not ctx.get("busy"):
+            return
+        tag = ctx.get("tag")
+        if tag is None or tag[1] != part_id:
+            return
+        if self.rt.cancel_work(self.node_id, tag):
+            # simulator path: the job is gone, continue leeching now
+            self.cancelled_parts += 1
+            ctx["busy"] = False
+            ctx["tag"] = None
+            self.TIME(app_id, "cancel")
+            self._request_work(app_id)
+        else:
+            # real-time path: the result (or CANCELLED sentinel) still
+            # arrives; mark it for discard in on_work_done
+            ctx["drop"] = tag
 
     # ================== seeder-set sync (paper §V) ====================== #
     def _other_seeders(self, app_id: str) -> Set[str]:
@@ -357,6 +521,9 @@ class Agent(Node):
             if not part.done:
                 part.done = True
                 part.results.append((msg.src, winner, 0.0))
+                # another seeder validated it first: any lease this seeder
+                # still holds for the part is a duplicate — cancel it
+                self._cancel_part_leases(app_id, part_id)
         if app.done and app_id not in self.completed_at:
             self.completed_at[app_id] = self.rt.now()
 
@@ -385,175 +552,23 @@ class Agent(Node):
                 self.dir.tracker_log(app_id,
                                      f"{self.rt.now():.3f} peer_gone "
                                      f"volunteer={node} parts={freed}")
-        for app_id in list(self.peer_pieces):
-            self.peer_pieces[app_id].pop(node, None)
-        for peers in self.swarm_peers.values():
-            peers.discard(node)
-        for app_id in list(self.full_seeders):
-            self.full_seeders[app_id].discard(node)
-        self.peer_load.pop(node, None)
-        # re-route any piece requests outstanding at the dead peer
-        for app_id, pending in self.piece_pending.items():
-            stale = [pid for pid, (peer, _) in pending.items()
-                     if peer == node]
-            for pid in stale:
-                del pending[pid]
-            if stale:
-                self._pump_pieces(app_id)
+        # engine side: forget pieces/slots, re-route outstanding requests
+        self.px.on_peer_gone(node)
         # re-route in-flight work pointed at the dead peer
         for app_id, ctx in list(self.current.items()):
             if ctx.get("host") == node and not ctx.get("busy"):
                 self._request_work(app_id)
 
     # ==================== piece transfer (paper §V) ===================== #
-    def _piece_avail(self, app_id: str) -> Dict[int, int]:
-        n_full = len(self.full_seeders.get(app_id, ()))
-        avail: Dict[int, int] = collections.defaultdict(lambda: 0)
-        manifest = self.manifests.get(app_id)
-        if manifest is not None:
-            for p in range(manifest.n_pieces):
-                avail[p] = n_full
-        for have in self.peer_pieces.get(app_id, {}).values():
-            for p in have:
-                avail[p] += 1
-        return avail
-
-    def _holders_of(self, app_id: str, piece_id: int) -> List[str]:
-        holders = set(self.full_seeders.get(app_id, ()))
-        for peer, have in self.peer_pieces.get(app_id, {}).items():
-            if piece_id in have:
-                holders.add(peer)
-        holders.discard(self.node_id)
-        holders -= self.bad_piece_peers.get(app_id, set())
-        return sorted(holders)
-
-    def _pump_pieces(self, app_id: str) -> None:
-        """Issue PIECE_REQs, rarest-first, to the least-loaded holders."""
-        inv = self.inventories.get(app_id)
-        if inv is None or inv.complete:
-            return
-        pending = self.piece_pending[app_id]
-        missing = [p for p in inv.missing() if p not in pending]
-        # stable per-node offset staggers tie-breaks so leechers start on
-        # different pieces (random-first-piece, deterministically)
-        off = sum(ord(c) for c in self.node_id + app_id)
-        order = rarest_first_order(missing, self._piece_avail(app_id),
-                                   offset=off)
-        now = self.rt.now()
-        # at most one in-flight request per holder: committing several
-        # pieces to one uplink queues them behind each other while other
-        # holders idle, and starves the seeder-egress reduction
-        busy = {peer for peer, _ in pending.values()}
-        for piece_id in order:
-            if len(pending) >= self.cfg.piece_pipeline:
-                break
-            holders = [h for h in self._holders_of(app_id, piece_id)
-                       if h not in busy]
-            if not holders:
-                continue
-            peer = min(holders, key=lambda h: (self.peer_load[h], h))
-            pending[piece_id] = (peer, now)
-            busy.add(peer)
-            self.peer_load[peer] += 1
-            self.SEND(peer, Msg(PIECE_REQ, self.node_id,
-                                {"app_id": app_id, "piece_id": piece_id},
-                                size_bytes=96))
-
-    def _our_bitfield(self, app_id: str) -> Tuple[int, ...]:
-        if app_id in self.images:
-            manifest = self.manifests.get(app_id)
-            return tuple(range(manifest.n_pieces)) if manifest else ()
-        inv = self.inventories.get(app_id)
-        return inv.bitfield() if inv else ()
-
-    def _on_piece_req(self, msg: Msg) -> None:
-        app_id = msg.payload["app_id"]
-        piece_id = msg.payload["piece_id"]
-        self.swarm_peers[app_id].add(msg.src)
-        manifest = self.manifests.get(app_id)
-        inv = self.inventories.get(app_id)
-        holds = (app_id in self.images or (inv is not None
-                                           and inv.has(piece_id)))
-        if manifest is None or not holds:
-            # tell the requester what we actually have so it re-routes
-            self.SEND(msg.src, Msg(HAVE, self.node_id,
-                                   {"app_id": app_id,
-                                    "pieces": list(self._our_bitfield(
-                                        app_id))},
-                                   size_bytes=96))
-            return
-        self.SEND(msg.src, Msg(
-            PIECE_DATA, self.node_id,
-            {"app_id": app_id, "piece_id": piece_id,
-             "proof": manifest.piece_hashes[piece_id],
-             "have": list(self._our_bitfield(app_id))},
-            size_bytes=96 + manifest.piece_size(piece_id)))
-
-    def _on_piece_data(self, msg: Msg) -> None:
-        app_id = msg.payload["app_id"]
-        piece_id = msg.payload["piece_id"]
-        self.peer_pieces[app_id][msg.src] = set(msg.payload.get("have", ()))
-        self.swarm_peers[app_id].add(msg.src)
-        pending = self.piece_pending[app_id]
-        if pending.get(piece_id, (None,))[0] == msg.src:
-            del pending[piece_id]
-            self.peer_load[msg.src] = max(0, self.peer_load[msg.src] - 1)
-        inv = self.inventories.get(app_id)
-        if inv is None or inv.complete:
-            return
-        if not inv.add(piece_id, msg.payload["proof"]):
-            # corrupt piece: never ask this peer again, fetch elsewhere
-            self.bad_piece_peers[app_id].add(msg.src)
-            self._pump_pieces(app_id)
-            return
-        manifest = inv.manifest
-        self.leech_bytes[app_id] += manifest.piece_size(piece_id)
-        if self.dir:
-            self.dir.save_piece(app_id, piece_id, msg.payload["proof"])
-        # announce to known peers directly AND via the tracker relay.  The
-        # relay alone would suffice for reach, but the extra hop delays
-        # rarity information enough to push measurably more piece traffic
-        # back onto the origin; duplicate 96-byte announces are cheap next
-        # to the pieces they steer.
-        announce = {"app_id": app_id, "pieces": [piece_id]}
-        for peer in sorted(self.swarm_peers[app_id] - {msg.src,
-                                                       self.node_id}):
-            self.SEND(peer, Msg(HAVE, self.node_id, dict(announce),
-                                size_bytes=96))
-        self.SEND(self.server_id, Msg(HAVE, self.node_id, dict(announce),
-                                      size_bytes=96))
-        if inv.complete:
-            self._image_complete(app_id)
-        else:
-            self._pump_pieces(app_id)
-
-    def _on_have(self, msg: Msg) -> None:
-        app_id = msg.payload["app_id"]
-        pieces = set(msg.payload["pieces"])
-        # the tracker relays announces with the originating peer attached
-        peer = msg.payload.get("peer", msg.src)
-        if peer == self.node_id:
-            return
-        self.swarm_peers[app_id].add(peer)
-        known = self.peer_pieces[app_id].setdefault(peer, set())
-        known |= pieces
-        # requests outstanding at a peer that turns out to lack the piece
-        # are re-routed right away
-        pending = self.piece_pending[app_id]
-        stale = [pid for pid, (p, _) in pending.items()
-                 if p == peer and pid not in known]
-        for pid in stale:
-            del pending[pid]
-            self.peer_load[peer] = max(0, self.peer_load[peer] - 1)
-        self._pump_pieces(app_id)
-
-    def _image_complete(self, app_id: str) -> None:
-        """All pieces verified: unpack the executable via the registry and
-        join the seeder set as a replica."""
-        inv = self.inventories[app_id]
-        mh = inv.manifest.manifest_hash
-        self.images[app_id] = mh
-        entry = resolve_executable(mh)
+    # All swarm transfer mechanics live in the PieceExchange engine
+    # (core/piece_exchange.py); the agent only routes messages to it (see
+    # RECV) and reacts to image completion below.
+    def _on_image_complete(self, app_id: str, manifest_hash: str,
+                           image: Optional[bytes]) -> None:
+        """Engine callback — all pieces verified: unpack the executable via
+        the registry and join the seeder set as a replica."""
+        self.images[app_id] = manifest_hash
+        entry = resolve_executable(manifest_hash)
         if (self.cfg.replica_seed and entry is not None
                 and entry.blueprint is not None
                 and app_id not in self.apps
@@ -579,6 +594,7 @@ class Agent(Node):
                                                "busy": False})
         ctx["host"] = host_id
         ctx["fetching"] = False
+        ctx["awaiting"] = True          # a grant is in flight
         ctx["last_req"] = self.rt.now()
         self.SEND(host_id, Msg(REQ, self.node_id, {"app_id": app_id},
                                size_bytes=96))
@@ -610,6 +626,7 @@ class Agent(Node):
             if entry.run_fn is not None:
                 fn = (lambda p=payload, f=entry.run_fn: f(p))
         tag = (app_id, part_id, host_id)
+        ctx["tag"] = tag                # PART_CANCEL needs the exact tag
         self.TIME(app_id, "start")
         self.rt.submit_work(self.node_id, tag, fn, sim_duration_s=sim_dur)
 
@@ -639,18 +656,16 @@ class Agent(Node):
         self.current.pop(app_id, None)
         self.stopped_apps.add(app_id)
         self.app_list = [a for a in self.app_list if a.app_id != app_id]
-        for piece_id, (peer, _) in self.piece_pending.pop(app_id,
-                                                          {}).items():
-            self.peer_load[peer] = max(0, self.peer_load[peer] - 1)
-        self.inventories.pop(app_id, None)
         self.replicas.pop(app_id, None)
-        if app_id not in self.apps:
+        keep_image = app_id in self.apps
+        if not keep_image:
             self.images.pop(app_id, None)
-            self.manifests.pop(app_id, None)
-        self.peer_pieces.pop(app_id, None)
-        self.swarm_peers.pop(app_id, None)
-        self.full_seeders.pop(app_id, None)
+        self.px.drop_app(app_id, keep_image=keep_image)
         self.no_work_from.pop(app_id, None)
+        for key in [k for k in self.part_results if k[0] == app_id]:
+            del self.part_results[key]
+        for key in [k for k in self.voted if k[0] == app_id]:
+            del self.voted[key]
         if self.dir:
             self.dir.drop_leech_app(app_id)
         self._maybe_start_work()
@@ -694,8 +709,8 @@ class Agent(Node):
         self.app_list = [r for r in rows if r.app_id not in self.stopped_apps]
         for row in self.app_list:
             if row.manifest is not None:
-                self.full_seeders[row.app_id] = \
-                    set(row.seeders) | {row.host_id}
+                self.px.note_full_seeders(row.app_id,
+                                          set(row.seeders) | {row.host_id})
             # tracker promoted this node from replica to host (origin died)
             if row.host_id == self.node_id and row.app_id in self.replicas:
                 app = self.replicas.pop(row.app_id)
@@ -706,7 +721,7 @@ class Agent(Node):
             # the seeder this leecher worked with vanished: re-route
             ctx = self.current.get(row.app_id)
             if ctx is not None and ctx.get("fetching"):
-                self._pump_pieces(row.app_id)
+                self.px.pump(row.app_id)
             elif ctx is not None:
                 host = ctx.get("host")
                 live = set(row.seeders) | {row.host_id}
@@ -731,19 +746,13 @@ class Agent(Node):
             if self.dry_until.get(row.app_id, -1.0) > now:
                 continue    # backing off after NO_WORK
             if row.manifest is not None and row.app_id not in self.images:
-                # swarm app: fetch the image piece-wise before crunching
+                # swarm app: fetch the image piece-wise before crunching;
+                # the engine announces the join (the tracker relays it so
+                # existing members learn about us and vice versa)
                 self.current[row.app_id] = {"host": None, "busy": False,
                                             "fetching": True,
                                             "last_req": now}
-                self.manifests.setdefault(row.app_id, row.manifest)
-                self.inventories.setdefault(
-                    row.app_id, PieceInventory(row.manifest))
-                # join the swarm: the tracker relays this (empty) announce
-                # so existing members learn about us and vice versa
-                self.SEND(self.server_id, Msg(
-                    HAVE, self.node_id,
-                    {"app_id": row.app_id, "pieces": []}, size_bytes=96))
-                self._pump_pieces(row.app_id)
+                self.px.join(row.app_id, row.manifest)
             else:
                 if not self._request_work(row.app_id):
                     continue
@@ -754,6 +763,7 @@ class Agent(Node):
         ctx = self.current.get(app_id)
         if ctx is None:
             return
+        ctx["awaiting"] = False
         # this seeder is (momentarily) dry; try the next replica before
         # backing off — other seeders may still hold leasable parts
         self.no_work_from[app_id].add(msg.src)
@@ -769,9 +779,11 @@ class Agent(Node):
 
     def _on_app_data(self, msg: Msg) -> None:
         app_id = msg.payload["app_id"]
+        part_id = msg.payload["part_id"]
         ctx = self.current.get(app_id)
         if ctx is None or ctx.get("busy"):
             return
+        ctx["awaiting"] = False
         mh = msg.payload.get("manifest_hash")
         if mh is not None and msg.payload.get("app_bytes", 0) > 0:
             # monolithic shipment: the full image rode along, so this agent
@@ -780,8 +792,16 @@ class Agent(Node):
         nbytes = self.SCAN(msg.payload)
         ctx["bytes"] = nbytes
         self.no_work_from.get(app_id, set()).discard(msg.src)
-        self.RUN(app_id, msg.payload["part_id"], msg.payload["payload"],
-                 msg.src)
+        cached = self.part_results.get((app_id, part_id))
+        if cached is not None:
+            # a different seeder re-leased a part this volunteer already
+            # computed: resend the stored result instead of burning a
+            # duplicate execution (SAVE/LOAD, endgame dedup)
+            self.SEND(msg.src, Msg(RESULT, self.node_id, {
+                "app_id": app_id, "part_id": part_id, "result": cached,
+                "time_s": 0.0, "data_bytes": 0}, size_bytes=1024))
+            return
+        self.RUN(app_id, part_id, msg.payload["payload"], msg.src)
 
     def on_work_done(self, tag, result, elapsed_s: float) -> None:
         app_id, part_id, host_id = tag
@@ -791,23 +811,41 @@ class Agent(Node):
             return      # STOPped while running
         ctx["busy"] = False
         ctx["last_req"] = self.rt.now()
+        if result is CANCELLED or ctx.get("drop") == tag:
+            # PART_CANCELled execution: discard, keep leeching
+            ctx.pop("drop", None)
+            ctx["tag"] = None
+            self.cancelled_parts += 1
+            self._request_work(app_id)
+            return
         info = self.COLLECT(app_id, elapsed_s, ctx.get("bytes", 0))
         self.SAVE(app_id, part_id, result)
         loaded = self.LOAD(app_id, part_id)
+        final = loaded if loaded is not None else result
+        self.part_results[(app_id, part_id)] = final
         # deliver to the live seeder for this app: if the one that leased
         # the part died meanwhile, its successor revalidates the part
         dest = ctx.get("host") or host_id
         self.SEND(dest, Msg(RESULT, self.node_id, {
-            "app_id": app_id, "part_id": part_id,
-            "result": loaded if loaded is not None else result,
+            "app_id": app_id, "part_id": part_id, "result": final,
             "time_s": info["time_s"], "data_bytes": info["data_bytes"],
         }, size_bytes=1024))
         self.results_log.append((self.rt.now(), app_id, part_id))
 
     def _on_result_ack(self, msg: Msg) -> None:
         app_id = msg.payload["app_id"]
-        if app_id in self.current:
-            # keep leeching the same app until the host runs dry
+        if not msg.payload.get("valid", True):
+            # the seeder rejected this result: drop the cached copy so any
+            # future grant (from a seeder that has not seen the vote)
+            # re-executes instead of replaying known-bad data
+            self.part_results.pop((app_id, msg.payload["part_id"]), None)
+        ctx = self.current.get(app_id)
+        if ctx is not None and not ctx.get("busy") \
+                and not ctx.get("fetching") and not ctx.get("awaiting"):
+            # keep leeching the same app until the host runs dry (the
+            # busy/awaiting guards ignore duplicate ACKs, e.g. an owner's
+            # late reject after the forwarder's optimistic accept, so one
+            # ACK never spawns two competing leases)
             self.REQ(app_id, msg.src)
 
     def _recover_stalled(self) -> None:
@@ -821,13 +859,7 @@ class Agent(Node):
         stall = self.cfg.work_timeout_s
         for app_id, ctx in list(self.current.items()):
             if ctx.get("fetching"):
-                pending = self.piece_pending.get(app_id, {})
-                stale = [pid for pid, (peer, t) in pending.items()
-                         if now - t > stall]
-                for pid in stale:
-                    peer, _ = pending.pop(pid)
-                    self.peer_load[peer] = max(0, self.peer_load[peer] - 1)
-                self._pump_pieces(app_id)
+                self.px.recover(app_id, stall)
             elif not ctx.get("busy") and now - ctx.get("last_req",
                                                        0.0) > stall:
                 self.no_work_from.pop(app_id, None)
@@ -845,5 +877,7 @@ class Agent(Node):
             self._recover_stalled()
         elif name == "tail":
             self.TAIL()
+        elif name == "rechoke":
+            self.px.rechoke()
         elif name == "retry":
             self._maybe_start_work()

@@ -25,13 +25,27 @@ class AgentDirs:
         os.makedirs(os.path.join(self.base, "Leech", "App"), exist_ok=True)
 
     # ---- seed side -------------------------------------------------------
-    def seed_app(self, app_id: str, app_bytes: int) -> str:
+    def seed_app(self, app_id: str, app_bytes: int,
+                 image: Optional[bytes] = None) -> str:
         d = os.path.join(self.base, "Seed", "App", app_id)
         os.makedirs(os.path.join(d, "Data"), exist_ok=True)
         os.makedirs(os.path.join(d, "Result"), exist_ok=True)
         with open(os.path.join(d, "app.bin"), "wb") as f:
-            f.write(b"\0" * min(app_bytes, 1 << 16))
+            f.write(image if image is not None
+                    else b"\0" * min(app_bytes, 1 << 16))
         return d
+
+    def save_seed_image(self, app_id: str, image: bytes) -> str:
+        """Write a (reassembled) application image as this agent's Seed
+        copy — the moment a leecher turns replica seeder."""
+        return self.seed_app(app_id, len(image), image=image)
+
+    def load_seed_image(self, app_id: str) -> Optional[bytes]:
+        p = os.path.join(self.base, "Seed", "App", app_id, "app.bin")
+        if not os.path.exists(p):
+            return None
+        with open(p, "rb") as f:
+            return f.read()
 
     def tracker_log(self, app_id: str, line: str) -> None:
         d = os.path.join(self.base, "Seed", "App", app_id, "Data")
@@ -47,20 +61,20 @@ class AgentDirs:
 
     # ---- piece cache (paper §V swarm extension) --------------------------
     # Verified image pieces live under Leech/App/<app_id>/Pieces so a
-    # volunteer can re-seed them; once the image completes the leecher is a
-    # replica and the cache doubles as its Seed copy.
-    def save_piece(self, app_id: str, piece_id: int, proof: str) -> None:
+    # volunteer can re-seed them mid-download; once the image completes the
+    # pieces are reassembled into the agent's Seed copy (save_seed_image).
+    def save_piece(self, app_id: str, piece_id: int, data: bytes) -> None:
         d = os.path.join(self.base, "Leech", "App", app_id, "Pieces")
         os.makedirs(d, exist_ok=True)
-        with open(os.path.join(d, f"{piece_id}.piece"), "w") as f:
-            f.write(proof)
+        with open(os.path.join(d, f"{piece_id}.piece"), "wb") as f:
+            f.write(data)
 
-    def load_piece(self, app_id: str, piece_id: int) -> Optional[str]:
+    def load_piece(self, app_id: str, piece_id: int) -> Optional[bytes]:
         p = os.path.join(self.base, "Leech", "App", app_id, "Pieces",
                          f"{piece_id}.piece")
         if not os.path.exists(p):
             return None
-        with open(p) as f:
+        with open(p, "rb") as f:
             return f.read()
 
     def list_pieces(self, app_id: str) -> list:
@@ -69,6 +83,17 @@ class AgentDirs:
             return []
         return sorted(int(f.split(".")[0]) for f in os.listdir(d)
                       if f.endswith(".piece"))
+
+    def assemble_image(self, app_id: str, n_pieces: int) -> Optional[bytes]:
+        """Join the cached pieces into the full image (None if any piece is
+        missing); content verification is the caller's job."""
+        parts = []
+        for piece_id in range(n_pieces):
+            data = self.load_piece(app_id, piece_id)
+            if data is None:
+                return None
+            parts.append(data)
+        return b"".join(parts)
 
     # ---- leech side ------------------------------------------------------
     def time_log(self, app_id: str, line: str) -> None:

@@ -48,7 +48,7 @@ DROP_APP = "DROP_APP"          # server -> agents: A removed from list
 BYE = "BYE"                    # agent -> server: clean leave
 
 # --- piece-wise swarm extension (paper §V) ------------------------------ #
-HAVE = "HAVE"                  # peer -> peers: verified piece announcement
+HAVE = "HAVE"                  # peer -> peers: verified-piece bitmask announce
 PIECE_REQ = "PIECE_REQ"        # leecher -> holder: request one image piece
 PIECE_DATA = "PIECE_DATA"      # holder -> leecher: piece payload + proof
 SEEDER_UPDATE = "SEEDER_UPDATE"  # agent -> server (and relayed to seeders):
@@ -56,3 +56,12 @@ SEEDER_UPDATE = "SEEDER_UPDATE"  # agent -> server (and relayed to seeders):
 PART_DONE = "PART_DONE"        # seeder <-> seeder: validated-part gossip
 PEER_GONE = "PEER_GONE"        # server -> agents: volunteer left/died;
                                  # reclaim its leases immediately
+
+# --- choke scheduler + endgame (PieceExchange engine) ------------------- #
+INTERESTED = "INTERESTED"      # leecher -> holder: I want pieces of app
+CHOKE = "CHOKE"                # holder -> leecher: upload slot withdrawn
+UNCHOKE = "UNCHOKE"            # holder -> leecher: upload slot granted
+PIECE_CANCEL = "PIECE_CANCEL"  # leecher -> holder: drop my queued piece req
+                               # (endgame reconciliation)
+PART_CANCEL = "PART_CANCEL"    # seeder -> volunteer: part validated elsewhere,
+                               # abort the leased execution

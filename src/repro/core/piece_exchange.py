@@ -1,0 +1,639 @@
+"""PieceExchange: the swarm transfer engine behind the agent (paper §V).
+
+Everything about moving application-image *pieces* between volunteers lives
+here, extracted from core/agent.py so the transfer scheduler is a layer of
+its own (the way BitTorrent separates the peer wire protocol from piece-
+selection policy, and the way BOINC separates its transitioner from the
+science app).  The Agent keeps only protocol glue: it routes PIECE_*/HAVE/
+CHOKE messages into the engine and reacts to the engine's callbacks.
+
+The engine owns, per application:
+
+  * peer state     — who is in the swarm, which pieces each peer holds
+                     (HAVE bitmasks), which full seeders exist;
+  * selection      — rarest-first piece ordering (core.swarm policy) with a
+                     deterministic per-node tie-break rotation, one in-
+                     flight request per holder, bounded pipeline;
+  * choke scheduling (seeder side) — a fixed number of upload slots;
+                     leechers announce INTERESTED, the engine UNCHOKEs the
+                     best reciprocators (bytes received from the peer, then
+                     bytes served to it) plus one optimistic slot rotated
+                     deterministically so newcomers bootstrap; requests
+                     from choked peers are refused with CHOKE so the
+                     requester re-routes;
+  * endgame        — when every missing piece is already in flight, the
+                     outstanding requests are duplicated to all other
+                     holders (flagged `endgame`, queued by choked holders
+                     instead of refused) and reconciled with PIECE_CANCEL
+                     the moment the first copy verifies;
+  * real bytes     — when the application image is real (Application.image)
+                     PIECE_DATA carries the actual payload slice, verified
+                     by re-hashing; verified pieces are cached on disk via
+                     AgentDirs and reassembled into the replica's Seed copy
+                     on completion.  Synthetic (simulation) images move as
+                     hash proofs over the identical code path.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Any, Callable, Dict, List, Optional, Set
+
+from repro.core.messages import (CHOKE, HAVE, INTERESTED, PIECE_CANCEL,
+                                 PIECE_DATA, PIECE_REQ, UNCHOKE, Msg)
+from repro.core.swarm import rarest_first_order
+from repro.core.workunit import (PieceInventory, PieceManifest, mask_nbytes,
+                                 pieces_of)
+
+
+class PieceExchange:
+    """Per-agent swarm transfer engine.
+
+    `send(dst, msg)` and `now()` come from the owning agent; `tracker_id`
+    is where join/HAVE announces go for relay.  `on_image_complete(app_id,
+    manifest_hash, image_bytes)` fires once per verified image;
+    `on_bytes(app_id, n)` accounts received piece payload.
+    """
+
+    def __init__(self, node_id: str, cfg, *,
+                 send: Callable[[str, Msg], None],
+                 now: Callable[[], float],
+                 tracker_id: str = "server",
+                 dirs=None,
+                 on_image_complete: Optional[Callable] = None,
+                 on_bytes: Optional[Callable[[str, int], None]] = None):
+        self.node_id = node_id
+        self.cfg = cfg
+        self.send = send
+        self.now = now
+        self.tracker_id = tracker_id
+        self.dirs = dirs
+        self.on_image_complete = on_image_complete
+        self.on_bytes = on_bytes
+        # --- image / holdings state ------------------------------------- #
+        self.manifests: Dict[str, PieceManifest] = {}
+        self.inventories: Dict[str, PieceInventory] = {}
+        self.complete: Set[str] = set()          # full verified images held
+        self.fetching: Set[str] = set()          # apps being leeched
+        self.image_src: Dict[str, bytes] = {}    # real image payloads
+        self.store: Dict[str, Dict[int, bytes]] = \
+            collections.defaultdict(dict)        # real piece payloads
+        # --- swarm peer state -------------------------------------------- #
+        self.full_seeders: Dict[str, Set[str]] = collections.defaultdict(set)
+        self.peer_pieces: Dict[str, Dict[str, Set[int]]] = \
+            collections.defaultdict(dict)
+        self.swarm_peers: Dict[str, Set[str]] = collections.defaultdict(set)
+        self.bad_peers: Dict[str, Set[str]] = collections.defaultdict(set)
+        # piece -> {holder: asked_at}; >1 holder only in endgame
+        self.pending: Dict[str, Dict[int, Dict[str, float]]] = \
+            collections.defaultdict(dict)
+        self.peer_load: Dict[str, int] = collections.defaultdict(int)
+        # --- choke scheduler (serving side) ------------------------------ #
+        self.interested: Dict[str, Set[str]] = collections.defaultdict(set)
+        self.unchoked: Dict[str, Set[str]] = collections.defaultdict(set)
+        self.opt_unchoked: Dict[str, str] = {}
+        self._opt_idx: Dict[str, int] = collections.defaultdict(int)
+        self._rechoke_round = 0
+        # app -> peer -> queued endgame piece requests (served on unchoke)
+        self.queued_reqs: Dict[str, Dict[str, Set[int]]] = \
+            collections.defaultdict(dict)
+        # --- choke view (leeching side) ---------------------------------- #
+        self.unchoked_by: Dict[str, Set[str]] = collections.defaultdict(set)
+        self.interest_sent: Dict[str, Set[str]] = collections.defaultdict(set)
+        # --- accounting --------------------------------------------------- #
+        self.bytes_from: Dict[str, int] = collections.defaultdict(int)
+        self.bytes_to: Dict[str, int] = collections.defaultdict(int)
+        self.pieces_from: Dict[str, Dict[str, int]] = \
+            collections.defaultdict(lambda: collections.defaultdict(int))
+        self.cancels_sent = 0
+        self.dup_piece_data = 0
+
+    # ===================== lifecycle / membership ======================= #
+    def add_local_app(self, app_id: str, manifest: PieceManifest,
+                      image: Optional[bytes] = None) -> None:
+        """Register an app whose full image this node already holds (origin
+        seeder, or a replica restored from disk)."""
+        self.manifests[app_id] = manifest
+        self.complete.add(app_id)
+        if image is not None:
+            self.image_src[app_id] = image
+
+    def join(self, app_id: str, manifest: PieceManifest) -> None:
+        """Start leeching an app image piece-wise; announces the (empty)
+        bitfield to the tracker so swarm members discover each other."""
+        self.manifests.setdefault(app_id, manifest)
+        self.inventories.setdefault(app_id, PieceInventory(manifest))
+        self.fetching.add(app_id)
+        self.send(self.tracker_id, self._have_msg(app_id))
+        self.pump(app_id)
+
+    def note_full_seeders(self, app_id: str, seeders: Set[str]) -> None:
+        self.full_seeders[app_id] = set(seeders)
+
+    def drop_app(self, app_id: str, keep_image: bool = False) -> None:
+        """Forget an app (STOP).  `keep_image` preserves the manifest and
+        payload for apps this node still seeds as origin."""
+        for asked in self.pending.pop(app_id, {}).values():
+            for peer in asked:
+                self.peer_load[peer] = max(0, self.peer_load[peer] - 1)
+        self.fetching.discard(app_id)
+        self.inventories.pop(app_id, None)
+        self.peer_pieces.pop(app_id, None)
+        self.swarm_peers.pop(app_id, None)
+        self.full_seeders.pop(app_id, None)
+        self.bad_peers.pop(app_id, None)
+        self.interested.pop(app_id, None)
+        self.unchoked.pop(app_id, None)
+        self.opt_unchoked.pop(app_id, None)
+        self.queued_reqs.pop(app_id, None)
+        self.unchoked_by.pop(app_id, None)
+        self.interest_sent.pop(app_id, None)
+        if not keep_image:
+            self.complete.discard(app_id)
+            self.manifests.pop(app_id, None)
+            self.image_src.pop(app_id, None)
+            self.store.pop(app_id, None)
+
+    def on_peer_gone(self, node: str) -> None:
+        for app_id in list(self.peer_pieces):
+            self.peer_pieces[app_id].pop(node, None)
+        for peers in self.swarm_peers.values():
+            peers.discard(node)
+        for peers in self.full_seeders.values():
+            peers.discard(node)
+        for peers in self.interested.values():
+            peers.discard(node)
+        for peers in self.unchoked.values():
+            peers.discard(node)
+        for peers in self.unchoked_by.values():
+            peers.discard(node)
+        for peers in self.interest_sent.values():
+            peers.discard(node)
+        for queued in self.queued_reqs.values():
+            queued.pop(node, None)
+        self.peer_load.pop(node, None)
+        for app_id, pending in self.pending.items():
+            dirty = False
+            for piece, asked in list(pending.items()):
+                if asked.pop(node, None) is not None:
+                    dirty = True
+                if not asked:
+                    del pending[piece]
+            if dirty:
+                self.pump(app_id)
+
+    # ====================== queries for the agent ======================= #
+    def bitfield_mask(self, app_id: str) -> int:
+        if app_id in self.complete:
+            manifest = self.manifests.get(app_id)
+            return (1 << manifest.n_pieces) - 1 if manifest else 0
+        inv = self.inventories.get(app_id)
+        return inv.bitfield() if inv else 0
+
+    def image_bytes(self, app_id: str) -> Optional[bytes]:
+        return self.image_src.get(app_id)
+
+    def seed_load(self, app_id: str) -> int:
+        """Upload pressure this node's choke scheduler sees for an app:
+        granted slots plus endgame requests queued behind them.  Reported
+        to the tracker (via STATUS loads) for least-loaded routing."""
+        queued = sum(len(ps) for ps in
+                     self.queued_reqs.get(app_id, {}).values())
+        return len(self.unchoked.get(app_id, ())) + queued
+
+    def assembled_image(self, app_id: str) -> Optional[bytes]:
+        """Reassemble a completed real image from the in-memory store or
+        the on-disk piece cache; None for synthetic images."""
+        manifest = self.manifests.get(app_id)
+        if manifest is None:
+            return None
+        if app_id in self.image_src:
+            return self.image_src[app_id]
+        store = self.store.get(app_id, {})
+        if len(store) == manifest.n_pieces:
+            return b"".join(store[p] for p in range(manifest.n_pieces))
+        if self.dirs is not None:
+            return self.dirs.assemble_image(app_id, manifest.n_pieces)
+        return None
+
+    # ========================= piece selection ========================== #
+    def _avail(self, app_id: str) -> Dict[int, int]:
+        n_full = len(self.full_seeders.get(app_id, ()))
+        avail: Dict[int, int] = collections.defaultdict(lambda: 0)
+        manifest = self.manifests.get(app_id)
+        if manifest is not None:
+            for p in range(manifest.n_pieces):
+                avail[p] = n_full
+        for have in self.peer_pieces.get(app_id, {}).values():
+            for p in have:
+                avail[p] += 1
+        return avail
+
+    def _holder_pool(self, app_id: str) -> Set[str]:
+        """Peers holding at least one piece (full seeders + partial
+        holders), excluding ourselves and banned peers."""
+        pool = set(self.full_seeders.get(app_id, ()))
+        for peer, have in self.peer_pieces.get(app_id, {}).items():
+            if have:
+                pool.add(peer)
+        pool.discard(self.node_id)
+        return pool - self.bad_peers.get(app_id, set())
+
+    def _holders(self, app_id: str, piece_id: int) -> List[str]:
+        full = self.full_seeders.get(app_id, ())
+        by_peer = self.peer_pieces.get(app_id, {})
+        return sorted(p for p in self._holder_pool(app_id)
+                      if p in full or piece_id in by_peer.get(p, ()))
+
+    def _usable(self, app_id: str, peer: str) -> bool:
+        """May we address a normal (non-endgame) request to `peer`?
+        Choking is the HOLDER's policy, so this is gated on its UNCHOKE
+        regardless of our own cfg.choke — requesting anyway would just
+        bounce off a CHOKE and spin."""
+        return peer in self.unchoked_by[app_id]
+
+    def _express_interest(self, app_id: str) -> None:
+        inv = self.inventories.get(app_id)
+        if inv is None or inv.complete:
+            return
+        sent = self.interest_sent[app_id]
+        for peer in sorted(self._holder_pool(app_id) - sent):
+            sent.add(peer)
+            self.send(peer, Msg(INTERESTED, self.node_id,
+                                {"app_id": app_id}, size_bytes=64))
+
+    def pump(self, app_id: str) -> None:
+        """Issue PIECE_REQs, rarest-first, to the least-loaded unchoked
+        holders; fall into endgame when everything missing is in flight."""
+        inv = self.inventories.get(app_id)
+        if inv is None or inv.complete:
+            return
+        self._express_interest(app_id)
+        pending = self.pending[app_id]
+        missing = [p for p in inv.missing() if p not in pending]
+        # stable per-node offset staggers tie-breaks so leechers start on
+        # different pieces (random-first-piece, deterministically)
+        off = sum(ord(c) for c in self.node_id + app_id)
+        order = rarest_first_order(missing, self._avail(app_id), offset=off,
+                                   n_pieces=inv.manifest.n_pieces)
+        now = self.now()
+        # at most one in-flight request per holder: committing several
+        # pieces to one uplink queues them behind each other while other
+        # holders idle, and starves the seeder-egress reduction
+        busy = {peer for asked in pending.values() for peer in asked}
+        for piece_id in order:
+            if len(pending) >= self.cfg.piece_pipeline:
+                break
+            holders = [h for h in self._holders(app_id, piece_id)
+                       if h not in busy and self._usable(app_id, h)]
+            if not holders:
+                continue
+            peer = min(holders, key=lambda h: (self.peer_load[h], h))
+            pending[piece_id] = {peer: now}
+            busy.add(peer)
+            self.peer_load[peer] += 1
+            self._send_req(app_id, piece_id, peer)
+        # endgame only once real progress exists AND everything still
+        # missing is already in flight: duplicating the very first
+        # requests (e.g. a one-piece image) would multiply seeder egress
+        # for transfers that are not tail-latency bound at all
+        if (self.cfg.endgame and pending and inv.have and not
+                [p for p in inv.missing() if p not in pending]):
+            self._endgame(app_id)
+
+    def _send_req(self, app_id: str, piece_id: int, peer: str,
+                  endgame: bool = False) -> None:
+        payload = {"app_id": app_id, "piece_id": piece_id}
+        if endgame:
+            payload["endgame"] = True
+        self.send(peer, Msg(PIECE_REQ, self.node_id, payload, size_bytes=96))
+
+    def _endgame(self, app_id: str) -> None:
+        """Every missing piece is in flight: duplicate each outstanding
+        request to other holders (choked ones queue it) so one slow uplink
+        cannot stall completion; PIECE_CANCEL reconciles the losers."""
+        pending = self.pending[app_id]
+        now = self.now()
+        cap = max(int(getattr(self.cfg, "endgame_dup", 3)), 1)
+        for piece_id, asked in pending.items():
+            if len(asked) >= cap:
+                continue
+            for holder in self._holders(app_id, piece_id):
+                if holder in asked:
+                    continue
+                asked[holder] = now
+                self.peer_load[holder] += 1
+                self._send_req(app_id, piece_id, holder, endgame=True)
+                if len(asked) >= cap:
+                    break
+
+    # ======================== message handlers ========================== #
+    def _note_peer_mask(self, app_id: str, peer: str,
+                        mask: Optional[int]) -> None:
+        if mask is None or peer == self.node_id:
+            return
+        known = self.peer_pieces[app_id].setdefault(peer, set())
+        known |= pieces_of(mask)
+        manifest = self.manifests.get(app_id)
+        if manifest is not None and len(known) >= manifest.n_pieces:
+            # the peer completed the image: it is a seeder now, not a
+            # leecher — release any upload slot it held
+            self.full_seeders[app_id].add(peer)
+            self.interested[app_id].discard(peer)
+            self.unchoked[app_id].discard(peer)
+            self.queued_reqs[app_id].pop(peer, None)
+
+    def _have_msg(self, app_id: str, peer: Optional[str] = None) -> Msg:
+        mask = self.bitfield_mask(app_id)
+        payload = {"app_id": app_id, "mask": mask}
+        if peer is not None:
+            payload["peer"] = peer
+        return Msg(HAVE, self.node_id, payload,
+                   size_bytes=96 + mask_nbytes(mask))
+
+    def on_have(self, msg: Msg) -> None:
+        app_id = msg.payload["app_id"]
+        # the tracker relays announces with the originating peer attached
+        peer = msg.payload.get("peer", msg.src)
+        if peer == self.node_id:
+            return
+        self.swarm_peers[app_id].add(peer)
+        self._note_peer_mask(app_id, peer, msg.payload.get("mask", 0))
+        known = self.peer_pieces[app_id].get(peer, set())
+        # requests outstanding at a peer that turns out to lack the piece
+        # are re-routed right away
+        pending = self.pending[app_id]
+        for piece_id, asked in list(pending.items()):
+            if peer in asked and piece_id not in known:
+                del asked[peer]
+                self.peer_load[peer] = max(0, self.peer_load[peer] - 1)
+                if not asked:
+                    del pending[piece_id]
+        if app_id in self.fetching:
+            self.pump(app_id)
+
+    def on_interested(self, msg: Msg) -> None:
+        app_id = msg.payload["app_id"]
+        peer = msg.src
+        self.swarm_peers[app_id].add(peer)
+        if app_id not in self.manifests:
+            return
+        self.interested[app_id].add(peer)
+        if not self.cfg.choke:
+            # choking disabled: everyone is always welcome
+            self.send(peer, Msg(UNCHOKE, self.node_id,
+                                {"app_id": app_id}, size_bytes=64))
+            return
+        self._maybe_unchoke_now(app_id)
+
+    def _maybe_unchoke_now(self, app_id: str) -> None:
+        """Fill free upload slots immediately (startup fast path); the
+        periodic rechoke later re-ranks by reciprocal throughput."""
+        unchoked = self.unchoked[app_id]
+        for peer in sorted(self.interested[app_id] - unchoked):
+            if len(unchoked) >= self.cfg.upload_slots:
+                break
+            self._unchoke(app_id, peer)
+
+    def _unchoke(self, app_id: str, peer: str) -> None:
+        self.unchoked[app_id].add(peer)
+        self.send(peer, Msg(UNCHOKE, self.node_id,
+                            {"app_id": app_id}, size_bytes=64))
+        queued = self.queued_reqs[app_id].pop(peer, None)
+        if queued:
+            for piece_id in sorted(queued):
+                self._serve(app_id, peer, piece_id)
+
+    def _choke(self, app_id: str, peer: str) -> None:
+        self.unchoked[app_id].discard(peer)
+        self.send(peer, Msg(CHOKE, self.node_id,
+                            {"app_id": app_id}, size_bytes=64))
+
+    def rechoke(self) -> None:
+        """Periodic re-choke: keep the best reciprocators (bytes received
+        from the peer, then bytes served to it — a seeder's proxy for the
+        peer's drain rate) in the regular slots and rotate one optimistic
+        unchoke through the rest so new peers can bootstrap."""
+        if not self.cfg.choke:
+            return
+        self._rechoke_round += 1
+        every = max(int(getattr(self.cfg, "optimistic_every", 3)), 1)
+        rotate = self._rechoke_round % every == 0
+        for app_id in list(self.interested):
+            self._rechoke_app(app_id, rotate)
+
+    def _rechoke_app(self, app_id: str, rotate: bool) -> None:
+        cands = {p for p in self.interested[app_id] if p != self.node_id}
+        slots = max(int(self.cfg.upload_slots), 1)
+        if len(cands) <= slots:
+            new = set(cands)
+            self.opt_unchoked.pop(app_id, None)
+        else:
+            ranked = sorted(cands, key=lambda p: (-self.bytes_from[p],
+                                                  -self.bytes_to[p], p))
+            new = set(ranked[:slots - 1])
+            rest = sorted(cands - new)
+            opt = self.opt_unchoked.get(app_id)
+            if rotate or opt not in rest:
+                self._opt_idx[app_id] += 1
+                opt = rest[self._opt_idx[app_id] % len(rest)]
+            self.opt_unchoked[app_id] = opt
+            new.add(opt)
+        old = self.unchoked.get(app_id, set())
+        for peer in sorted(old - new):
+            self._choke(app_id, peer)
+        for peer in sorted(new - old):
+            self._unchoke(app_id, peer)
+
+    def on_choke(self, msg: Msg) -> None:
+        app_id = msg.payload["app_id"]
+        peer = msg.src
+        self.unchoked_by[app_id].discard(peer)
+        # re-route outstanding requests parked at the choking holder
+        pending = self.pending[app_id]
+        for piece_id, asked in list(pending.items()):
+            if peer in asked and len(asked) == 1:
+                # endgame duplicates stay queued at the holder; a sole
+                # request must move elsewhere or the piece stalls
+                del asked[peer]
+                self.peer_load[peer] = max(0, self.peer_load[peer] - 1)
+                del pending[piece_id]
+        if app_id in self.fetching:
+            self.pump(app_id)
+
+    def on_unchoke(self, msg: Msg) -> None:
+        app_id = msg.payload["app_id"]
+        self.unchoked_by[app_id].add(msg.src)
+        if app_id in self.fetching:
+            self.pump(app_id)
+
+    def on_piece_cancel(self, msg: Msg) -> None:
+        app_id = msg.payload["app_id"]
+        queued = self.queued_reqs.get(app_id, {}).get(msg.src)
+        if queued is not None:
+            queued.discard(msg.payload["piece_id"])
+            if not queued:
+                self.queued_reqs[app_id].pop(msg.src, None)
+
+    def on_piece_req(self, msg: Msg) -> None:
+        app_id = msg.payload["app_id"]
+        piece_id = msg.payload["piece_id"]
+        peer = msg.src
+        self.swarm_peers[app_id].add(peer)
+        manifest = self.manifests.get(app_id)
+        inv = self.inventories.get(app_id)
+        holds = (app_id in self.complete
+                 or (inv is not None and inv.has(piece_id)))
+        if manifest is None or not holds:
+            # tell the requester what we actually have so it re-routes
+            self.send(peer, self._have_msg(app_id))
+            return
+        self.interested[app_id].add(peer)       # a request implies interest
+        if self.cfg.choke and peer not in self.unchoked[app_id]:
+            self._maybe_unchoke_now(app_id)
+        if self.cfg.choke and peer not in self.unchoked[app_id]:
+            if msg.payload.get("endgame"):
+                # endgame duplicates wait for a slot instead of bouncing;
+                # PIECE_CANCEL prunes them if another holder wins the race
+                self.queued_reqs[app_id].setdefault(peer, set()).add(piece_id)
+            else:
+                self._choke(app_id, peer)
+            return
+        self._serve(app_id, peer, piece_id)
+
+    def _piece_payload(self, app_id: str, piece_id: int) -> Optional[bytes]:
+        image = self.image_src.get(app_id)
+        if image is not None:
+            manifest = self.manifests[app_id]
+            lo = piece_id * manifest.piece_bytes
+            return image[lo:lo + manifest.piece_bytes]
+        data = self.store.get(app_id, {}).get(piece_id)
+        if data is None and self.dirs is not None:
+            data = self.dirs.load_piece(app_id, piece_id)
+        return data
+
+    def _serve(self, app_id: str, peer: str, piece_id: int) -> None:
+        manifest = self.manifests[app_id]
+        mask = self.bitfield_mask(app_id)
+        payload = {"app_id": app_id, "piece_id": piece_id,
+                   "proof": manifest.piece_hashes[piece_id], "mask": mask}
+        data = self._piece_payload(app_id, piece_id)
+        if data is not None:
+            payload["data"] = data
+        self.bytes_to[peer] += manifest.piece_size(piece_id)
+        self.send(peer, Msg(PIECE_DATA, self.node_id, payload,
+                            size_bytes=96 + manifest.piece_size(piece_id)
+                            + mask_nbytes(mask)))
+
+    def on_piece_data(self, msg: Msg) -> None:
+        app_id = msg.payload["app_id"]
+        piece_id = msg.payload["piece_id"]
+        peer = msg.src
+        self.swarm_peers[app_id].add(peer)
+        self._note_peer_mask(app_id, peer, msg.payload.get("mask"))
+        pending = self.pending[app_id]
+        asked = pending.get(piece_id)
+        if asked is not None and peer in asked:
+            del asked[peer]
+            self.peer_load[peer] = max(0, self.peer_load[peer] - 1)
+            if not asked:
+                # last outstanding request for the piece answered: the
+                # piece must re-enter `missing` (pump skips pending keys),
+                # or a corrupt reply would stall it until recover()
+                del pending[piece_id]
+        inv = self.inventories.get(app_id)
+        if inv is None or inv.complete or inv.has(piece_id):
+            if inv is not None:
+                self.dup_piece_data += 1     # endgame race lost by `peer`
+            self._reconcile(app_id, piece_id)
+            return
+        data = msg.payload.get("data")
+        if not inv.add(piece_id, msg.payload.get("proof"), data=data):
+            # corrupt piece: never ask this peer again, fetch elsewhere
+            self.bad_peers[app_id].add(peer)
+            self.unchoked_by[app_id].discard(peer)
+            self.pump(app_id)
+            return
+        manifest = inv.manifest
+        nbytes = manifest.piece_size(piece_id)
+        self.bytes_from[peer] += nbytes
+        self.pieces_from[app_id][peer] += 1
+        if data is not None:
+            self.store[app_id][piece_id] = data
+            if self.dirs is not None:
+                self.dirs.save_piece(app_id, piece_id, data)
+        if self.on_bytes is not None:
+            self.on_bytes(app_id, nbytes)
+        # endgame reconciliation: the race is decided, cancel the rest
+        self._reconcile(app_id, piece_id)
+        # announce to known peers directly AND via the tracker relay.  The
+        # relay alone would suffice for reach, but the extra hop delays
+        # rarity information enough to push measurably more piece traffic
+        # back onto the origin; the ~bitmask-sized announces are cheap next
+        # to the pieces they steer.
+        for target in sorted(self.swarm_peers[app_id] - {peer,
+                                                         self.node_id}):
+            self.send(target, self._have_msg(app_id))
+        self.send(self.tracker_id, self._have_msg(app_id))
+        if inv.complete:
+            self._complete_fetch(app_id)
+        else:
+            self.pump(app_id)
+
+    def _reconcile(self, app_id: str, piece_id: int) -> None:
+        """Drop the pending entry for a piece we now hold and PIECE_CANCEL
+        every other holder still racing to serve it."""
+        asked = self.pending[app_id].pop(piece_id, None)
+        if not asked:
+            return
+        for holder in sorted(asked):
+            self.peer_load[holder] = max(0, self.peer_load[holder] - 1)
+            self.cancels_sent += 1
+            self.send(holder, Msg(PIECE_CANCEL, self.node_id,
+                                  {"app_id": app_id, "piece_id": piece_id},
+                                  size_bytes=64))
+
+    def _complete_fetch(self, app_id: str) -> None:
+        """All pieces verified: reassemble real images, cache the Seed
+        copy, and hand the agent the keys to the executable."""
+        inv = self.inventories[app_id]
+        self.complete.add(app_id)
+        self.fetching.discard(app_id)
+        for piece_id in list(self.pending.get(app_id, {})):
+            self._reconcile(app_id, piece_id)
+        image = None
+        if inv.manifest.content_hashed:
+            image = self.assembled_image(app_id)   # store or disk cache
+            if image is not None:
+                self.image_src[app_id] = image
+                # the joined image supersedes the per-piece slices
+                self.store.pop(app_id, None)
+                if self.dirs is not None:
+                    self.dirs.save_seed_image(app_id, image)
+        if self.on_image_complete is not None:
+            self.on_image_complete(app_id, inv.manifest.manifest_hash, image)
+
+    # ========================== maintenance ============================= #
+    def recover(self, app_id: str, stall_s: float) -> None:
+        """Re-issue piece requests that went unanswered (e.g. the holder
+        died before PEER_GONE propagated, or never unchoked us)."""
+        now = self.now()
+        pending = self.pending.get(app_id, {})
+        for piece_id, asked in list(pending.items()):
+            for peer, t in list(asked.items()):
+                if now - t > stall_s:
+                    del asked[peer]
+                    self.peer_load[peer] = max(0,
+                                               self.peer_load[peer] - 1)
+                    # the holder may have the request parked in its choke
+                    # queue (endgame): withdraw it, or it inflates the
+                    # load the holder reports to the tracker forever
+                    self.send(peer, Msg(PIECE_CANCEL, self.node_id,
+                                        {"app_id": app_id,
+                                         "piece_id": piece_id},
+                                        size_bytes=64))
+            if not asked:
+                del pending[piece_id]
+        # allow a fresh INTERESTED round toward holders that never answered
+        if app_id in self.fetching and not self.unchoked_by[app_id]:
+            self.interest_sent[app_id].clear()
+        self.pump(app_id)

@@ -55,6 +55,11 @@ class LinkModel:
     # PONGs would queue behind multi-MB pieces and the tracker would
     # declare it dead.
     uplink_Bps: Optional[float] = None
+    # per-node downlink capacity, mirroring the uplink model: bulk
+    # transfers *into* a node serialise through its ingress pipe.  Without
+    # it an unchoked seeder could fan N pieces into one leecher "for free"
+    # and choking would not be measurable.
+    downlink_Bps: Optional[float] = None
     bulk_threshold_bytes: int = 1 << 16
 
     def latency(self, size_bytes: int) -> float:
@@ -62,6 +67,9 @@ class LinkModel:
 
     def tx_time(self, size_bytes: int) -> float:
         return size_bytes / (self.uplink_Bps or self.bandwidth_Bps)
+
+    def rx_time(self, size_bytes: int) -> float:
+        return size_bytes / (self.downlink_Bps or self.bandwidth_Bps)
 
 
 class Runtime:
@@ -82,6 +90,18 @@ class Runtime:
                     sim_duration_s: Optional[float] = None) -> None:
         raise NotImplementedError
 
+    def cancel_work(self, node_id: str, tag: Any) -> bool:
+        """Best-effort abort of submitted-but-unfinished work.  Returns True
+        when the job was removed before completing (its ``on_work_done``
+        will never fire); False when it already ran or cannot be stopped —
+        the caller must then discard the eventual result itself."""
+        return False
+
+
+# sentinel result delivered by ThreadRuntime for work cancelled after its
+# queue pop could no longer be prevented; nodes must discard it
+CANCELLED = object()
+
 
 # --------------------------------------------------------------------------- #
 class SimRuntime(Runtime):
@@ -95,9 +115,10 @@ class SimRuntime(Runtime):
         self._heap: List[Tuple[float, int, Callable[[], None]]] = []
         self._cancelled: set = set()
         self.speed: Dict[str, float] = {}
-        # per-node egress accounting and uplink-contention state
+        # per-node egress accounting and uplink/downlink-contention state
         self.tx_bytes: Dict[str, int] = {}
         self._uplink_free: Dict[str, float] = {}
+        self._downlink_free: Dict[str, float] = {}
         # processor-sharing executor state (per node): jobs share the core,
         # like the paper's clients running two app processes on one-core VMs
         self._ps_jobs: Dict[str, Dict[int, list]] = {}
@@ -118,14 +139,24 @@ class SimRuntime(Runtime):
     def send(self, dst: str, msg: Msg) -> None:
         src = msg.src
         self.tx_bytes[src] = self.tx_bytes.get(src, 0) + msg.size_bytes
-        if (self.link.uplink_Bps is not None
-                and msg.size_bytes >= self.link.bulk_threshold_bytes):
-            # serialise through the sender's uplink: the transfer starts
-            # once earlier transfers from this node have drained
-            start = max(self._t, self._uplink_free.get(src, 0.0))
-            done = start + self.link.tx_time(msg.size_bytes)
-            self._uplink_free[src] = done
-            at = done + self.link.base_latency_s
+        bulk = msg.size_bytes >= self.link.bulk_threshold_bytes
+        if bulk and (self.link.uplink_Bps is not None
+                     or self.link.downlink_Bps is not None):
+            # the endpoint pipes replace the generic shared-bandwidth term
+            # (they ARE the transfer-time model for bulk messages): first
+            # serialise through the sender's uplink, then through the
+            # receiver's downlink, so concurrent seeders fanning into one
+            # node queue behind each other at its ingress
+            t = self._t
+            if self.link.uplink_Bps is not None:
+                start = max(t, self._uplink_free.get(src, 0.0))
+                t = start + self.link.tx_time(msg.size_bytes)
+                self._uplink_free[src] = t
+            if self.link.downlink_Bps is not None:
+                start = max(t, self._downlink_free.get(dst, 0.0))
+                t = start + self.link.rx_time(msg.size_bytes)
+                self._downlink_free[dst] = t
+            at = t + self.link.base_latency_s
         else:
             at = self._t + self.link.latency(msg.size_bytes)
         self._at(at, lambda: self._deliver(dst, msg))
@@ -203,6 +234,20 @@ class SimRuntime(Runtime):
         self._ps_jobs.setdefault(node_id, {})[jid] = [dur, tag, fn, self._t]
         self._ps_schedule(node_id)
 
+    def cancel_work(self, node_id: str, tag: Any) -> bool:
+        """Remove an unfinished job from the processor-sharing executor; the
+        remaining jobs immediately reclaim its share of the core."""
+        jobs = self._ps_jobs.get(node_id)
+        if not jobs:
+            return False
+        for jid, job in list(jobs.items()):
+            if job[1] == tag:
+                self._ps_advance(node_id)
+                jobs.pop(jid, None)
+                self._ps_schedule(node_id)
+                return True
+        return False
+
     def run(self, until: Optional[float] = None,
             stop_when: Optional[Callable[[], bool]] = None,
             max_events: int = 50_000_000) -> float:
@@ -233,9 +278,15 @@ class ThreadRuntime(Runtime):
         self._seq = itertools.count()
         self._stop = threading.Event()
         self._work_q: "queue.Queue" = queue.Queue()
+        self._cancelled_work: set = set()
+        self._work_lock = threading.Lock()
         self._threads: List[threading.Thread] = []
         self.n_workers = n_workers
         self._t0 = time.monotonic()
+        # run-generation token: threads spawned by an earlier run() exit
+        # when a newer run starts, instead of surviving a timed-out join
+        # and double-consuming the queues
+        self._gen = 0
 
     def add_node(self, node: Node, speed: float = 1.0) -> None:
         self.nodes[node.node_id] = node
@@ -264,39 +315,76 @@ class ThreadRuntime(Runtime):
                     sim_duration_s: Optional[float] = None) -> None:
         self._work_q.put((node_id, tag, fn))
 
+    def cancel_work(self, node_id: str, tag: Any) -> bool:
+        """Mark queued work cancelled.  A worker that pops a cancelled job
+        skips execution and delivers the CANCELLED sentinel instead; work
+        already executing cannot be stopped.  Always returns False — the
+        caller must discard the eventual (sentinel or real) result."""
+        with self._work_lock:
+            self._cancelled_work.add((node_id, tag))
+        return False
+
     # -- loop --------------------------------------------------------------
-    def _worker(self):
-        while not self._stop.is_set():
+    def _worker(self, gen: int):
+        while not self._stop.is_set() and gen == self._gen:
             try:
                 node_id, tag, fn = self._work_q.get(timeout=0.05)
             except queue.Empty:
                 continue
+            with self._work_lock:
+                cancelled = (node_id, tag) in self._cancelled_work
+                self._cancelled_work.discard((node_id, tag))
+            if cancelled:
+                self._q.put(("done", node_id, (tag, CANCELLED, 0.0)))
+                continue
             t0 = self.now()
             result = fn() if fn is not None else None
+            with self._work_lock:
+                # consume a cancel that arrived mid-execution: the mark
+                # must not outlive this job and falsely cancel a future
+                # submission reusing the same tag
+                self._cancelled_work.discard((node_id, tag))
             self._q.put(("done", node_id, (tag, result, self.now() - t0)))
 
-    def _dispatch(self):
-        while not self._stop.is_set():
-            # fire due timers
-            now = self.now()
-            fired = []
+    def _fire_due_timers(self) -> None:
+        fired = []
+        with self._timer_lock:
+            while self._timers and self._timers[0][0] <= self.now():
+                t, _, nid, name, delay, periodic = heapq.heappop(
+                    self._timers)
+                if (nid, name) in self._cancelled:
+                    continue
+                fired.append((nid, name))
+                if periodic:
+                    # re-arm from the *scheduled* time, not the (late) fire
+                    # time, so periodic timers keep their grid instead of
+                    # drifting by the handling latency every period; when
+                    # overloaded past a full period, skip the missed slots
+                    # (re-arming at <= now would re-fire in this same pass)
+                    nt = t + delay
+                    if nt <= self.now():
+                        nt = self.now() + delay
+                    heapq.heappush(self._timers,
+                                   (nt, next(self._seq), nid,
+                                    name, delay, periodic))
+        for nid, name in fired:
+            node = self.nodes.get(nid)
+            if node:
+                node.on_timer(name)
+
+    def _dispatch(self, gen: int):
+        while not self._stop.is_set() and gen == self._gen:
+            # deadline-aware wait: block on the message queue only until
+            # the next timer is due, and re-check timers after every
+            # message, so a loaded queue cannot starve or drift timers
+            self._fire_due_timers()
             with self._timer_lock:
-                while self._timers and self._timers[0][0] <= now:
-                    t, _, nid, name, delay, periodic = heapq.heappop(
-                        self._timers)
-                    if (nid, name) in self._cancelled:
-                        continue
-                    fired.append((nid, name))
-                    if periodic:
-                        heapq.heappush(self._timers,
-                                       (now + delay, next(self._seq), nid,
-                                        name, delay, periodic))
-            for nid, name in fired:
-                node = self.nodes.get(nid)
-                if node:
-                    node.on_timer(name)
+                deadline = self._timers[0][0] if self._timers else None
+            wait = 0.05 if deadline is None else deadline - self.now()
+            if wait <= 0.0:
+                continue
             try:
-                kind, dst, data = self._q.get(timeout=0.01)
+                kind, dst, data = self._q.get(timeout=min(wait, 0.05))
             except queue.Empty:
                 continue
             node = self.nodes.get(dst)
@@ -310,11 +398,22 @@ class ThreadRuntime(Runtime):
 
     def run(self, until_s: float = 30.0,
             stop_when: Optional[Callable[[], bool]] = None) -> None:
+        """Drive the loop for up to `until_s`.  Re-entrant: a second call
+        restarts the worker/dispatcher threads, so tests can run phases
+        (e.g. seed an image, add a node, run again)."""
+        for th in self._threads:         # previous phase's threads
+            th.join(timeout=1.0)
+        self._gen += 1                   # orphans (stuck in a long fn)
+        gen = self._gen                  # exit once their job finishes
+        self._stop.clear()
+        self._threads = []
         for _ in range(self.n_workers):
-            th = threading.Thread(target=self._worker, daemon=True)
+            th = threading.Thread(target=self._worker, args=(gen,),
+                                  daemon=True)
             th.start()
             self._threads.append(th)
-        disp = threading.Thread(target=self._dispatch, daemon=True)
+        disp = threading.Thread(target=self._dispatch, args=(gen,),
+                                daemon=True)
         disp.start()
         self._threads.append(disp)
         deadline = time.monotonic() + until_s

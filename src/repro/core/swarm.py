@@ -70,16 +70,24 @@ def plan_broadcast(n_nodes: int, n_pieces: int, fanout: int = 1,
 
 
 def rarest_first_order(missing: Sequence[int], avail: Dict[int, int],
-                       offset: int = 0) -> List[int]:
+                       offset: int = 0,
+                       n_pieces: Optional[int] = None) -> List[int]:
     """Order `missing` pieces by swarm-wide availability, rarest first.
 
-    The same policy `plan_broadcast` applies offline; the live agent
-    protocol (core/agent.py) feeds it HAVE-derived holder counts to pick
-    which piece to request next.  `offset` rotates the tie-break so equal-
-    rarity pieces are picked starting from different positions per caller
-    (deterministic random-first-piece).
+    The same policy `plan_broadcast` applies offline; the live piece
+    engine (core/piece_exchange.py) feeds it HAVE-derived holder counts to
+    pick which piece to request next.  `offset` rotates the tie-break so
+    equal-rarity pieces are picked starting from different positions per
+    caller (deterministic random-first-piece).
+
+    `n_pieces` is the manifest's total piece count and fixes the rotation
+    modulus: with the old `len(missing)` modulus the tie-break order
+    changed every time a piece completed.  Callers that know the manifest
+    should always pass it; the fallback (largest missing id + 1) only
+    keeps the order stable for a fixed missing set.
     """
-    n = max(len(missing), 1)
+    n = max(n_pieces if n_pieces is not None
+            else max(missing, default=0) + 1, 1)
     return sorted(missing, key=lambda p: (avail.get(p, 0), (p + offset) % n,
                                           p))
 

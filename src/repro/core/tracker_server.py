@@ -33,6 +33,7 @@ from repro.core.messages import (APP_LIST, BYE, DROP_APP, HAVE, PEER_GONE,
                                  PING, PONG, REGISTER, SEEDER_UPDATE,
                                  STATUS, AppInfo, Msg)
 from repro.core.runtime import Node, Runtime
+from repro.core.workunit import mask_nbytes
 
 
 @dataclass
@@ -145,10 +146,11 @@ class TrackerServer(Node):
                                  size_bytes=256 + 64 * len(self._init_cache)))
 
     def _on_have(self, msg: Msg) -> None:
-        """Swarm announce: volunteers report verified pieces (or join with
-        an empty list); the tracker relays so peers discover each other —
-        its classic BitTorrent announce role."""
+        """Swarm announce: volunteers report verified pieces as a compact
+        bitmask (or join with an empty one); the tracker relays so peers
+        discover each other — its classic BitTorrent announce role."""
         app_id = msg.payload["app_id"]
+        mask = msg.payload.get("mask", 0)
         swarm = self.swarms.setdefault(app_id, set())
         swarm.add(msg.src)
         row = self.app_list.get(app_id)
@@ -156,8 +158,8 @@ class TrackerServer(Node):
         if row is not None:
             targets |= set(row.seeders) | {row.host_id}
         relay = Msg(HAVE, self.node_id,
-                    {"app_id": app_id, "pieces": msg.payload["pieces"],
-                     "peer": msg.src}, size_bytes=96)
+                    {"app_id": app_id, "mask": mask, "peer": msg.src},
+                    size_bytes=96 + mask_nbytes(mask))
         for t in targets - {msg.src, self.node_id}:
             self.rt.send(t, relay)
 

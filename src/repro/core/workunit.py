@@ -30,6 +30,33 @@ def _hash(*fields: object) -> str:
     return h.hexdigest()
 
 
+# ---- piece bitmasks ------------------------------------------------------- #
+# HAVE/PIECE_DATA announcements carry holdings as a compact int bitmask
+# (bit p set <=> piece p held) so announce traffic scales O(pieces/8) bytes
+# per message instead of O(pieces) list entries.
+def mask_of(pieces) -> int:
+    mask = 0
+    for p in pieces:
+        mask |= 1 << p
+    return mask
+
+
+def pieces_of(mask: int) -> Set[int]:
+    out: Set[int] = set()
+    p = 0
+    while mask:
+        if mask & 1:
+            out.add(p)
+        mask >>= 1
+        p += 1
+    return out
+
+
+def mask_nbytes(mask: int) -> int:
+    """On-wire size of a bitmask (for honest Msg.size_bytes accounting)."""
+    return (mask.bit_length() + 7) // 8
+
+
 @dataclass(frozen=True)
 class PieceManifest:
     """Metainfo for piece-wise image distribution (paper §V).
@@ -42,6 +69,10 @@ class PieceManifest:
     piece_bytes: int
     total_bytes: int
     piece_hashes: Tuple[str, ...]
+    # True when piece_hashes are content hashes of real payload bytes
+    # (from_bytes): verification then REQUIRES the bytes — the hashes are
+    # public metainfo, so a bare proof proves nothing
+    content_hashed: bool = False
 
     @property
     def n_pieces(self) -> int:
@@ -64,7 +95,8 @@ class PieceManifest:
         hashes = tuple(
             hashlib.sha1(image[i:i + piece_bytes]).hexdigest()
             for i in range(0, max(len(image), 1), piece_bytes))
-        return cls(app_id, piece_bytes, len(image), hashes)
+        return cls(app_id, piece_bytes, len(image), hashes,
+                   content_hashed=True)
 
     @classmethod
     def synthetic(cls, app_id: str, total_bytes: int,
@@ -85,9 +117,21 @@ class PieceInventory:
         self.have: Set[int] = (set(range(manifest.n_pieces)) if complete
                                else set())
 
-    def add(self, piece_id: int, proof: str) -> bool:
-        """Verify `proof` against the manifest; reject corrupt pieces."""
+    def add(self, piece_id: int, proof: Optional[str] = None,
+            data: Optional[bytes] = None) -> bool:
+        """Verify a piece against the manifest; reject corrupt pieces.
+
+        Real transfers pass `data` (the payload slice) and the content hash
+        is recomputed here — a peer cannot fake a proof for bogus bytes,
+        and for a content-hashed manifest a bare proof is rejected outright
+        (piece hashes are public metainfo; only the bytes prove holding).
+        Synthetic (simulation) transfers pass only `proof`.
+        """
         if not (0 <= piece_id < self.manifest.n_pieces):
+            return False
+        if data is not None:
+            proof = hashlib.sha1(data).hexdigest()
+        elif self.manifest.content_hashed:
             return False
         if proof != self.manifest.piece_hashes[piece_id]:
             return False
@@ -105,8 +149,9 @@ class PieceInventory:
     def complete(self) -> bool:
         return len(self.have) == self.manifest.n_pieces
 
-    def bitfield(self) -> Tuple[int, ...]:
-        return tuple(sorted(self.have))
+    def bitfield(self) -> int:
+        """Holdings as a compact int bitmask (bit p set <=> piece p held)."""
+        return mask_of(self.have)
 
 
 # --------------------------------------------------------------------------- #
@@ -164,12 +209,23 @@ class Application:
     swarm: bool = False
     piece_bytes: int = 1 << 16
     manifest: Optional[PieceManifest] = None
+    # real application image: when set, pieces carry actual payload slices
+    # of these bytes and the manifest hashes their content; when None the
+    # image is synthetic (simulation) and pieces move as hash proofs
+    image: Optional[bytes] = None
 
     def ensure_manifest(self) -> PieceManifest:
         if self.manifest is None:
-            self.manifest = PieceManifest.synthetic(
-                self.app_id, self.app_bytes,
-                self.piece_bytes if self.swarm else max(self.app_bytes, 1))
+            if self.image is not None:
+                self.manifest = PieceManifest.from_bytes(
+                    self.app_id, self.image,
+                    self.piece_bytes if self.swarm
+                    else max(len(self.image), 1))
+            else:
+                self.manifest = PieceManifest.synthetic(
+                    self.app_id, self.app_bytes,
+                    self.piece_bytes if self.swarm
+                    else max(self.app_bytes, 1))
         return self.manifest
 
     def blueprint(self) -> Callable[[], "Application"]:
@@ -184,7 +240,8 @@ class Application:
                 parts=[Part(pid, payload, data_bytes=db)
                        for pid, payload, db in spec],
                 m_min=self.m_min, m_max=self.m_max, swarm=self.swarm,
-                piece_bytes=self.piece_bytes, manifest=self.manifest)
+                piece_bytes=self.piece_bytes, manifest=self.manifest,
+                image=self.image)
         return make
 
     def pending_parts(self, leased: Dict[int, list]) -> List[Part]:
@@ -260,7 +317,8 @@ def make_prime_app(app_id: str, host_id: str, lo: int, hi: int,
                    part_data_bytes: int = 4096, m_min: int = 1,
                    sim_time_per_number: float = 2.5e-3,
                    swarm: bool = False,
-                   piece_bytes: int = 1 << 16) -> Application:
+                   piece_bytes: int = 1 << 16,
+                   image: Optional[bytes] = None) -> Application:
     """The paper's test application: prime search by exhaustion."""
     bounds = []
     step = (hi - lo) / n_parts
@@ -280,9 +338,11 @@ def make_prime_app(app_id: str, host_id: str, lo: int, hi: int,
     parts = [Part(i, bounds[i], data_bytes=part_data_bytes)
              for i in range(n_parts)]
     return Application(app_id, host_id, run_fn=run_fn, cost_fn=cost_fn,
-                       app_bytes=app_bytes, parts=parts, m_min=m_min,
+                       app_bytes=len(image) if image is not None
+                       else app_bytes,
+                       parts=parts, m_min=m_min,
                        m_max=max(m_min, 1), swarm=swarm,
-                       piece_bytes=piece_bytes)
+                       piece_bytes=piece_bytes, image=image)
 
 
 def find_primes(lo: int, hi: int) -> list:

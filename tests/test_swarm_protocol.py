@@ -28,13 +28,23 @@ def test_piece_manifest_from_bytes_verifies():
     m = PieceManifest.from_bytes("x", data, piece_bytes=1024)
     inv = PieceInventory(m)
     assert not inv.complete
-    assert inv.add(0, m.piece_hashes[0])
-    assert not inv.add(1, "bogus-proof")         # corrupt piece rejected
-    assert 1 in inv.missing()
+    # content-hashed manifest: the hashes are public metainfo, so a bare
+    # proof (even the correct one) proves nothing — bytes are required
+    assert m.content_hashed
+    assert not inv.add(0, m.piece_hashes[0])
+    assert not inv.add(1, "bogus-proof")
+    # real byte slices verify by content re-hash; bogus bytes rejected
+    assert inv.add(1, data=data[1024:2048])
+    assert not inv.add(2, data=b"evil" * 256)
+    assert 2 in inv.missing()
     for i in inv.missing():
-        assert inv.add(i, m.piece_hashes[i])
+        assert inv.add(i, data=data[i * 1024:(i + 1) * 1024])
     assert inv.complete
-    assert inv.bitfield() == tuple(range(m.n_pieces))
+    assert inv.bitfield() == (1 << m.n_pieces) - 1   # compact int bitmask
+    # synthetic manifests keep the proof path (simulation)
+    s = PieceManifest.synthetic("x", 4096, 1024)
+    assert not s.content_hashed
+    assert PieceInventory(s).add(0, s.piece_hashes[0])
 
 
 def test_rarest_first_order_policy():
@@ -166,7 +176,6 @@ def test_monolithic_app_still_dropped_on_host_death():
 def test_corrupt_piece_peer_is_ignored():
     rt, server, host, app, leechers = build_swarm(n_leechers=3)
     evil = leechers[0]
-    orig = evil._on_piece_req
 
     def corrupt(msg):
         # serve garbage proofs for everything we hold
@@ -177,7 +186,7 @@ def test_corrupt_piece_peer_is_ignored():
         evil.SEND(msg.src, Msg(PIECE_DATA, evil.node_id,
                                {"app_id": app_id, "piece_id": piece_id,
                                 "proof": "garbage",
-                                "have": list(evil._our_bitfield(app_id))},
+                                "mask": evil._our_bitfield(app_id)},
                                size_bytes=96))
     evil._on_piece_req = corrupt
     rt.run(until=3600, stop_when=lambda: app.done)
