@@ -1,0 +1,116 @@
+"""PieceExchange.pump micro-benchmark: incremental vs reference bookkeeping.
+
+`pump` runs on every HAVE announce, every UNCHOKE and every PIECE_DATA of
+every fetching node, so its per-call cost bounds how large a swarm the
+simulator (and a real agent) can sustain.  This bench builds one engine at
+swarm scale — N peers that each announced a random bitmask over P pieces —
+and measures pump calls/sec twice over the *same* state:
+
+  * reference    — `use_incremental=False`: the pre-optimization path that
+    rebuilds the full availability map (O(P·N)) and rescans the holder
+    pool per piece (`_pump_reference`);
+  * incremental  — the maintained count array + holder index + cached
+    pool (O(P log P) argsort per call).
+
+The two paths issue identical requests (asserted by the differential tests
+in tests/test_exchange_scaling.py); only the bookkeeping differs.  Run
+with --json to record the speedup into the perf-trajectory artifact
+(swarm_bench merges these rows into BENCH_swarm.json).
+"""
+from __future__ import annotations
+
+import random
+import time
+
+from repro.core import AgentConfig, Msg, PieceExchange, PieceManifest
+from repro.core.messages import HAVE, UNCHOKE
+
+
+def build_engine(n_peers: int = 64, n_pieces: int = 256, seed: int = 11,
+                 incremental: bool = True) -> PieceExchange:
+    """A leeching engine mid-swarm: some full seeders, N partial holders
+    with random bitmasks, half the holders unchoked us."""
+    cfg = AgentConfig(piece_pipeline=8)
+    px = PieceExchange("bench-node", cfg, send=lambda dst, msg: None,
+                       now=lambda: 0.0)
+    px.use_incremental = incremental
+    manifest = PieceManifest.synthetic("bench", n_pieces * 1000, 1000)
+    px.join("bench", manifest)
+    rng = random.Random(seed)
+    peers = [f"P{i:03d}" for i in range(n_peers)]
+    px.note_full_seeders("bench", set(peers[:max(n_peers // 8, 1)]))
+    for peer in peers:
+        px.on_have(Msg(HAVE, peer, {"app_id": "bench",
+                                    "mask": rng.getrandbits(n_pieces)}))
+    for peer in peers[::2]:
+        px.on_unchoke(Msg(UNCHOKE, peer, {"app_id": "bench"}))
+    return px
+
+
+def time_pump(px: PieceExchange, iters: int) -> float:
+    """Seconds per pump call; in-flight state is reset between calls so
+    every iteration exercises a full scheduling decision (not the
+    pipeline-full early-out)."""
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        px.pending["bench"].clear()
+        px.peer_load.clear()
+        px.pump("bench")
+    return (time.perf_counter() - t0) / iters
+
+
+def bench(verbose: bool = True, smoke: bool = False,
+          n_peers: int = 64, n_pieces: int = 256) -> list:
+    iters_ref = 40 if smoke else 200
+    iters_inc = 400 if smoke else 2000
+    ref = build_engine(n_peers, n_pieces, incremental=False)
+    inc = build_engine(n_peers, n_pieces, incremental=True)
+    time_pump(ref, 5)                    # warmup
+    time_pump(inc, 5)
+    ref_s = time_pump(ref, iters_ref)
+    inc_s = time_pump(inc, iters_inc)
+    speedup = ref_s / max(inc_s, 1e-12)
+    rows = [
+        {"name": f"pump_reference_n{n_peers}_p{n_pieces}",
+         "us_per_call": ref_s * 1e6,
+         "derived": f"{1.0 / ref_s:.0f} pump calls/s (pre-PR bookkeeping)",
+         "metrics": {"calls_per_sec": 1.0 / ref_s}},
+        {"name": f"pump_incremental_n{n_peers}_p{n_pieces}",
+         "us_per_call": inc_s * 1e6,
+         "derived": f"{1.0 / inc_s:.0f} pump calls/s (incremental)",
+         "metrics": {"calls_per_sec": 1.0 / inc_s}},
+        {"name": f"pump_speedup_n{n_peers}_p{n_pieces}",
+         "us_per_call": 0.0,
+         "derived": f"incremental pump {speedup:.1f}x the reference",
+         "metrics": {"speedup": speedup}},
+    ]
+    if verbose:
+        for r in rows:
+            print(f"[exchange] {r['name']}: {r['derived']}")
+    return rows
+
+
+def main(argv=None) -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced iteration counts for CI")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write rows as JSON (perf trajectory artifact)")
+    args = ap.parse_args(argv)
+    rows = bench(smoke=args.smoke)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "exchange", "smoke": args.smoke,
+                       "rows": rows}, f, indent=2, default=str)
+        print(f"[exchange] wrote {args.json}")
+
+
+if __name__ == "__main__":
+    import os
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    main()

@@ -38,6 +38,13 @@ def main() -> None:
                        f"{res['choked']['origin_up_mb']:.0f}MB "
                        f"makespan {res['baseline']['makespan_s']:.0f}s->"
                        f"{res['choked']['makespan_s']:.0f}s")
+        elif name == "scenario_vii":
+            derived = (f"N={res['n_volunteers']} makespan="
+                       f"{res['makespan_s']:.0f}s replication="
+                       f"{res['full_replication_s']:.0f}s origin_up="
+                       f"{res['origin_up_mb']:.0f}MB "
+                       f"{res['events_per_sec']:.0f}ev/s "
+                       f"rss={res['peak_rss_mb']:.0f}MB")
         else:
             derived = (f"speedup1={res['speedup_app1']:.2f}(3.5) "
                        f"speedup2={res['speedup_app2']:.2f}(3.3)")

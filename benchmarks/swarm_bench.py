@@ -13,6 +13,32 @@ from repro.core.swarm import naive_rounds, plan_broadcast, rounds_of, simulate
 from repro.parallel.weight_torrent import broadcast_cost_model
 
 
+def bench_scenario_vii(verbose: bool = True, n_volunteers: int = 200,
+                       image_mb: float = 64.0):
+    """Scenario VII (flash crowd at scale) as a perf-trajectory row:
+    protocol metrics plus simulator throughput."""
+    from benchmarks.paper_tables import scenario_vii
+    res = scenario_vii(verbose=False, n_volunteers=n_volunteers,
+                       image_mb=image_mb)
+    row = {
+        "name": f"swarm_flashcrowd_n{n_volunteers}_img{int(image_mb)}MB",
+        "us_per_call": 0.0,
+        "derived": (f"makespan {res['makespan_s']:.0f}s replication "
+                    f"{res['full_replication_s']:.0f}s origin_up "
+                    f"{res['origin_up_mb']:.0f}MB replicas "
+                    f"{res['replicas']}/{n_volunteers} | "
+                    f"{res['events_per_sec']:.0f} events/s "
+                    f"rss {res['peak_rss_mb']:.0f}MB"),
+        "metrics": {k: res[k] for k in
+                    ("makespan_s", "full_replication_s", "origin_up_mb",
+                     "replicas", "done", "replicated", "events",
+                     "events_per_sec", "wall_s", "peak_rss_mb")},
+    }
+    if verbose:
+        print(f"[swarm] {row['name']}: {row['derived']}")
+    return [row]
+
+
 def bench_live(verbose: bool = True, n_volunteers: int = 8,
                image_mb: float = 32.0):
     """Scenarios V + VI through the real protocol (smaller than
@@ -88,6 +114,15 @@ def bench(verbose: bool = True, smoke: bool = False):
     rows += bench_live(verbose=verbose,
                        n_volunteers=6 if smoke else 8,
                        image_mb=16.0 if smoke else 32.0)
+    # Scenario VII — the flash crowd runs at full N=200 even in smoke (the
+    # incremental engine made it cheap enough for CI); a quick N=64 run
+    # rides along for the scaling curve
+    from benchmarks import exchange_bench
+    rows += bench_scenario_vii(verbose=verbose, n_volunteers=64)
+    rows += bench_scenario_vii(verbose=verbose, n_volunteers=200)
+    # pump micro-benchmark: the ≥10x incremental-vs-reference ratio is the
+    # acceptance gate for the bookkeeping rewrite
+    rows += exchange_bench.bench(verbose=verbose, smoke=smoke)
     return rows
 
 

@@ -1,11 +1,12 @@
 from repro.core.agent import Agent, AgentConfig  # noqa: F401
 from repro.core.messages import AppInfo, Msg  # noqa: F401
 from repro.core.metrics import AppMetrics, complexity_hint  # noqa: F401
-from repro.core.piece_exchange import PieceExchange  # noqa: F401
+from repro.core.piece_exchange import (PieceExchange,  # noqa: F401
+                                       RollingRate, iter_bits)
 from repro.core.runtime import (CANCELLED, LinkModel, Node,  # noqa: F401
                                 SimRuntime, ThreadRuntime)
 from repro.core.swarm import (plan_broadcast, naive_rounds,  # noqa: F401
-                              rarest_first_order)
+                              rarest_first_order, rarest_first_order_np)
 from repro.core.tracker_server import TrackerConfig, TrackerServer  # noqa: F401
 from repro.core.validation import VotingPool, majority_vote  # noqa: F401
 from repro.core.workunit import (Application, LeaseTable, Part,  # noqa: F401

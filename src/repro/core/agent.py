@@ -72,6 +72,9 @@ class AgentConfig:
     optimistic_every: int = 3           # rotate optimistic slot every N
     endgame: bool = True                # dup requests + CANCEL reconcile
     endgame_dup: int = 3                # max concurrent holders per piece
+    # rolling window for the rechoke ranking's byte-rate estimate: peers
+    # are ranked by bytes moved in the last window, not lifetime totals
+    rate_window_s: float = 20.0
 
 
 class Agent(Node):
@@ -206,7 +209,23 @@ class Agent(Node):
         if msg.src in self.cfg.deny_from:
             return
         kind = msg.kind
-        if kind == PING:
+        # swarm data-plane kinds first: HAVE announces alone are O(N) per
+        # verified piece, so they dominate the dispatch at scale
+        if kind == HAVE:
+            self.px.on_have(msg)
+        elif kind == PIECE_REQ:
+            self._on_piece_req(msg)
+        elif kind == PIECE_DATA:
+            self.px.on_piece_data(msg)
+        elif kind == INTERESTED:
+            self.px.on_interested(msg)
+        elif kind == CHOKE:
+            self.px.on_choke(msg)
+        elif kind == UNCHOKE:
+            self.px.on_unchoke(msg)
+        elif kind == PIECE_CANCEL:
+            self.px.on_piece_cancel(msg)
+        elif kind == PING:
             self.SEND(self.server_id, Msg(PONG, self.node_id, size_bytes=64))
         elif kind == APP_LIST:
             self._on_app_list(msg.payload["apps"])
@@ -223,20 +242,6 @@ class Agent(Node):
             self.VAL(msg)
         elif kind == RESULT_ACK:
             self._on_result_ack(msg)
-        elif kind == HAVE:
-            self.px.on_have(msg)
-        elif kind == PIECE_REQ:
-            self._on_piece_req(msg)
-        elif kind == PIECE_DATA:
-            self.px.on_piece_data(msg)
-        elif kind == INTERESTED:
-            self.px.on_interested(msg)
-        elif kind == CHOKE:
-            self.px.on_choke(msg)
-        elif kind == UNCHOKE:
-            self.px.on_unchoke(msg)
-        elif kind == PIECE_CANCEL:
-            self.px.on_piece_cancel(msg)
         elif kind == PART_CANCEL:
             self._on_part_cancel(msg)
         elif kind == PART_DONE:
@@ -529,13 +534,26 @@ class Agent(Node):
 
     def _on_seeder_update(self, msg: Msg) -> None:
         """Relayed by the tracker: a new replica joined the seeder set —
-        bring it up to date on validated parts."""
+        bring it up to date on validated parts.  Only the app's host plus
+        the three lowest-id seeders in this agent's current view send the
+        sync: one copy suffices, and N existing seeders each shipping the
+        full done list to every newcomer made replica formation
+        O(N² · parts) in large swarms.  The host is always a sender
+        because the tracker keeps `host_id` pointing at a live node
+        (promotion pushes immediately), so even a stale seeder view
+        cannot leave the newcomer without any sync."""
         app_id = msg.payload["app_id"]
         new_seeder = msg.payload["seeder"]
         app = self._seeded_app(app_id)
         if app is None or new_seeder == self.node_id:
             return
         self.swarm_peers[app_id].add(new_seeder)
+        ring = [s for s in self._seeder_ring(app_id) if s != new_seeder]
+        row = self._row_for(app_id)
+        is_host = (app_id in self.apps
+                   or (row is not None and row.host_id == self.node_id))
+        if not is_host and self.node_id not in ring[:3]:
+            return
         done = [(p.part_id, (p.results[0][1] if p.results else None))
                 for p in app.parts if p.done]
         if done:

@@ -77,6 +77,16 @@ class AgentDirs:
         with open(p, "rb") as f:
             return f.read()
 
+    def drop_piece(self, app_id: str, piece_id: int) -> None:
+        """Remove one cached piece (a corrupt or foreign file found while
+        rescanning the cache on agent restart)."""
+        p = os.path.join(self.base, "Leech", "App", app_id, "Pieces",
+                         f"{piece_id}.piece")
+        try:
+            os.remove(p)
+        except OSError:
+            pass
+
     def list_pieces(self, app_id: str) -> list:
         d = os.path.join(self.base, "Leech", "App", app_id, "Pieces")
         if not os.path.isdir(d):

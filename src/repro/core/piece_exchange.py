@@ -10,14 +10,15 @@ CHOKE messages into the engine and reacts to the engine's callbacks.
 The engine owns, per application:
 
   * peer state     — who is in the swarm, which pieces each peer holds
-                     (HAVE bitmasks), which full seeders exist;
+                     (HAVE bitmasks, stored as ints), which full seeders
+                     exist;
   * selection      — rarest-first piece ordering (core.swarm policy) with a
                      deterministic per-node tie-break rotation, one in-
                      flight request per holder, bounded pipeline;
   * choke scheduling (seeder side) — a fixed number of upload slots;
                      leechers announce INTERESTED, the engine UNCHOKEs the
-                     best reciprocators (bytes received from the peer, then
-                     bytes served to it) plus one optimistic slot rotated
+                     best reciprocators (rolling-window byte *rates*, not
+                     lifetime totals) plus one optimistic slot rotated
                      deterministically so newcomers bootstrap; requests
                      from choked peers are refused with CHOKE so the
                      requester re-routes;
@@ -32,17 +33,103 @@ The engine owns, per application:
                      AgentDirs and reassembled into the replica's Seed copy
                      on completion.  Synthetic (simulation) images move as
                      hash proofs over the identical code path.
+
+Scaling (bitmask-native hot paths).  All per-pump bookkeeping is
+incremental so a node's cost per scheduling decision is O(P log P) in the
+piece count and *independent of swarm size*:
+
+  * a per-app numpy int32 availability-count array is updated on HAVE
+    bitmask deltas, seeder-set changes and PEER_GONE instead of being
+    rebuilt O(P·N) on every pump;
+  * a per-piece holder index and a cached holder pool replace the per-piece
+    O(N) peer rescans;
+  * full seeders contribute the same constant to every piece's
+    availability, so rarest-first sorts on the partial-holder counts alone
+    (`rarest_first_order_np`, an argsort over the count array);
+  * real piece payloads are zero-copy `memoryview` slices over one shared
+    image buffer, and completed images are interned by manifest hash so N
+    replicas cost O(image) memory, not O(N·image).
+
+The pre-optimization paths are kept (`_pump_reference`, `_avail_naive`,
+`_holders_naive`) as the reference implementation: differential tests
+assert the fast path issues identical requests, and
+benchmarks/exchange_bench.py measures the speedup against them.
 """
 from __future__ import annotations
 
 import collections
 from typing import Any, Callable, Dict, List, Optional, Set
 
+import numpy as np
+
 from repro.core.messages import (CHOKE, HAVE, INTERESTED, PIECE_CANCEL,
                                  PIECE_DATA, PIECE_REQ, UNCHOKE, Msg)
-from repro.core.swarm import rarest_first_order
-from repro.core.workunit import (PieceInventory, PieceManifest, mask_nbytes,
-                                 pieces_of)
+from repro.core.swarm import rarest_first_order, rarest_first_order_np
+from repro.core.workunit import PieceInventory, PieceManifest, mask_nbytes
+
+
+def iter_bits(mask: int):
+    """Yield the set bit positions of an int bitmask, lowest first."""
+    while mask:
+        low = mask & -mask
+        yield low.bit_length() - 1
+        mask ^= low
+
+
+class RollingRate:
+    """Sliding-window byte-rate estimator for the rechoke ranking.
+
+    `add(t, n)` records a transfer; `rate(now)` returns bytes/sec over the
+    trailing `window_s` seconds.  Replaces the cumulative byte counters in
+    choke ranking so a peer that moved bytes long ago stops outranking
+    peers that are moving bytes *now* (stale-transfer dominance in
+    long-lived swarms was a ROADMAP open item)."""
+
+    __slots__ = ("window_s", "_events", "_total")
+
+    def __init__(self, window_s: float):
+        self.window_s = max(window_s, 1e-9)
+        self._events: collections.deque = collections.deque()
+        self._total = 0
+
+    def add(self, t: float, nbytes: int) -> None:
+        self._events.append((t, nbytes))
+        self._total += nbytes
+        # prune on write as well as read: an estimator that is fed but
+        # never ranked (e.g. a seeder we download from but never serve)
+        # must not retain one entry per piece forever
+        self._prune(t)
+
+    def rate(self, now: float) -> float:
+        self._prune(now)
+        return self._total / self.window_s
+
+    def _prune(self, now: float) -> None:
+        cutoff = now - self.window_s
+        ev = self._events
+        while ev and ev[0][0] <= cutoff:
+            self._total -= ev.popleft()[1]
+
+
+# Completed real images interned by manifest hash: every node that holds the
+# same verified image shares ONE immutable bytes buffer, so a simulation
+# with N replicas costs O(image) memory instead of O(N·image).  The keys are
+# content-derived (the info-hash covers the per-piece content hashes), so a
+# cache hit carries exactly the trust piece verification already
+# established.  Eviction only loses the dedup, never data — holders keep
+# their buffer references alive.
+_IMAGE_INTERN: "collections.OrderedDict[str, bytes]" = collections.OrderedDict()
+_IMAGE_INTERN_MAX = 8
+
+
+def intern_image(manifest_hash: str, image) -> bytes:
+    cached = _IMAGE_INTERN.get(manifest_hash)
+    if cached is None:
+        cached = bytes(image) if isinstance(image, memoryview) else image
+        _IMAGE_INTERN[manifest_hash] = cached
+        while len(_IMAGE_INTERN) > _IMAGE_INTERN_MAX:
+            _IMAGE_INTERN.popitem(last=False)
+    return cached
 
 
 class PieceExchange:
@@ -69,17 +156,22 @@ class PieceExchange:
         self.dirs = dirs
         self.on_image_complete = on_image_complete
         self.on_bytes = on_bytes
+        # False switches pump to the pre-optimization reference path
+        # (kept for differential tests and the exchange micro-benchmark)
+        self.use_incremental = True
         # --- image / holdings state ------------------------------------- #
         self.manifests: Dict[str, PieceManifest] = {}
         self.inventories: Dict[str, PieceInventory] = {}
         self.complete: Set[str] = set()          # full verified images held
         self.fetching: Set[str] = set()          # apps being leeched
-        self.image_src: Dict[str, bytes] = {}    # real image payloads
-        self.store: Dict[str, Dict[int, bytes]] = \
-            collections.defaultdict(dict)        # real piece payloads
+        # real image payloads, as views over the interned shared buffer
+        self.image_src: Dict[str, memoryview] = {}
+        self.store: Dict[str, Dict[int, Any]] = \
+            collections.defaultdict(dict)        # real piece payload views
         # --- swarm peer state -------------------------------------------- #
         self.full_seeders: Dict[str, Set[str]] = collections.defaultdict(set)
-        self.peer_pieces: Dict[str, Dict[str, Set[int]]] = \
+        # app -> peer -> HAVE bitmask (bit p set <=> peer holds piece p)
+        self.peer_masks: Dict[str, Dict[str, int]] = \
             collections.defaultdict(dict)
         self.swarm_peers: Dict[str, Set[str]] = collections.defaultdict(set)
         self.bad_peers: Dict[str, Set[str]] = collections.defaultdict(set)
@@ -87,6 +179,16 @@ class PieceExchange:
         self.pending: Dict[str, Dict[int, Dict[str, float]]] = \
             collections.defaultdict(dict)
         self.peer_load: Dict[str, int] = collections.defaultdict(int)
+        # --- incremental availability (tentpole) -------------------------- #
+        # per-app int32 array: how many *partial* holders have each piece
+        # (full seeders add a uniform constant tracked by len(full_seeders))
+        self._counts: Dict[str, np.ndarray] = {}
+        # per-app, per-piece set of partial holders (the holder index)
+        self._piece_holders: Dict[str, List[Set[str]]] = {}
+        # cached holder pool; dropped on any membership change
+        self._pool_cache: Dict[str, Set[str]] = {}
+        # apps whose holder pool is unchanged since the last INTERESTED pass
+        self._interest_clean: Set[str] = set()
         # --- choke scheduler (serving side) ------------------------------ #
         self.interested: Dict[str, Set[str]] = collections.defaultdict(set)
         self.unchoked: Dict[str, Set[str]] = collections.defaultdict(set)
@@ -102,6 +204,9 @@ class PieceExchange:
         # --- accounting --------------------------------------------------- #
         self.bytes_from: Dict[str, int] = collections.defaultdict(int)
         self.bytes_to: Dict[str, int] = collections.defaultdict(int)
+        self._rate_window = float(getattr(cfg, "rate_window_s", 20.0))
+        self.rate_from: Dict[str, RollingRate] = {}
+        self.rate_to: Dict[str, RollingRate] = {}
         self.pieces_from: Dict[str, Dict[str, int]] = \
             collections.defaultdict(lambda: collections.defaultdict(int))
         self.cancels_sent = 0
@@ -109,25 +214,61 @@ class PieceExchange:
 
     # ===================== lifecycle / membership ======================= #
     def add_local_app(self, app_id: str, manifest: PieceManifest,
-                      image: Optional[bytes] = None) -> None:
+                      image=None) -> None:
         """Register an app whose full image this node already holds (origin
         seeder, or a replica restored from disk)."""
         self.manifests[app_id] = manifest
         self.complete.add(app_id)
         if image is not None:
-            self.image_src[app_id] = image
+            if manifest.content_hashed:
+                image = intern_image(manifest.manifest_hash, image)
+            self.image_src[app_id] = memoryview(image)
 
     def join(self, app_id: str, manifest: PieceManifest) -> None:
-        """Start leeching an app image piece-wise; announces the (empty)
-        bitfield to the tracker so swarm members discover each other."""
+        """Start leeching an app image piece-wise; announces the bitfield
+        to the tracker so swarm members discover each other.  An intact
+        on-disk piece cache (an agent restarting mid-download) is re-hashed
+        into the inventory first, so only the genuinely missing pieces are
+        fetched."""
         self.manifests.setdefault(app_id, manifest)
-        self.inventories.setdefault(app_id, PieceInventory(manifest))
+        inv = self.inventories.setdefault(app_id, PieceInventory(manifest))
         self.fetching.add(app_id)
+        # build the availability index now: announces that arrived before
+        # the manifest get folded in (and complete peers promoted) here
+        self._arrays(app_id)
+        self._rescan_cache(app_id, inv)
         self.send(self.tracker_id, self._have_msg(app_id))
-        self.pump(app_id)
+        if inv.complete:
+            self._complete_fetch(app_id)
+        else:
+            self.pump(app_id)
+
+    def _rescan_cache(self, app_id: str, inv: PieceInventory) -> int:
+        """Restart support (ROADMAP open item): verify pieces cached under
+        Leech/App/<id>/Pieces back into the inventory instead of
+        re-fetching everything.  Corrupt or foreign cache files are
+        deleted so the pieces are fetched from the swarm.  Returns the
+        number of pieces restored."""
+        if self.dirs is None or inv.have or not inv.manifest.content_hashed:
+            return 0
+        restored = 0
+        for piece_id in self.dirs.list_pieces(app_id):
+            data = (self.dirs.load_piece(app_id, piece_id)
+                    if 0 <= piece_id < inv.manifest.n_pieces else None)
+            if data is not None and inv.add(piece_id, data=data):
+                self.store[app_id][piece_id] = data
+                restored += 1
+            else:
+                self.dirs.drop_piece(app_id, piece_id)
+        return restored
 
     def note_full_seeders(self, app_id: str, seeders: Set[str]) -> None:
-        self.full_seeders[app_id] = set(seeders)
+        seeders = set(seeders)
+        if seeders != self.full_seeders.get(app_id):
+            # guard: APP_LIST re-pushes the same set every refresh; only a
+            # real change may invalidate the cached holder pool
+            self.full_seeders[app_id] = seeders
+            self._pool_changed(app_id)
 
     def drop_app(self, app_id: str, keep_image: bool = False) -> None:
         """Forget an app (STOP).  `keep_image` preserves the manifest and
@@ -137,7 +278,11 @@ class PieceExchange:
                 self.peer_load[peer] = max(0, self.peer_load[peer] - 1)
         self.fetching.discard(app_id)
         self.inventories.pop(app_id, None)
-        self.peer_pieces.pop(app_id, None)
+        self.peer_masks.pop(app_id, None)
+        self._counts.pop(app_id, None)
+        self._piece_holders.pop(app_id, None)
+        self._pool_cache.pop(app_id, None)
+        self._interest_clean.discard(app_id)
         self.swarm_peers.pop(app_id, None)
         self.full_seeders.pop(app_id, None)
         self.bad_peers.pop(app_id, None)
@@ -154,12 +299,25 @@ class PieceExchange:
             self.store.pop(app_id, None)
 
     def on_peer_gone(self, node: str) -> None:
-        for app_id in list(self.peer_pieces):
-            self.peer_pieces[app_id].pop(node, None)
-        for peers in self.swarm_peers.values():
-            peers.discard(node)
-        for peers in self.full_seeders.values():
-            peers.discard(node)
+        for app_id, masks in self.peer_masks.items():
+            mask = masks.pop(node, None)
+            if mask:
+                counts = self._counts.get(app_id)
+                if counts is not None:
+                    holders = self._piece_holders[app_id]
+                    # stored masks may carry out-of-range bits from
+                    # announces that arrived before the manifest was
+                    # known; the counts only ever covered valid pieces
+                    for p in iter_bits(mask & ((1 << len(counts)) - 1)):
+                        counts[p] -= 1
+                        holders[p].discard(node)
+                self._pool_changed(app_id)
+        self.rate_from.pop(node, None)
+        self.rate_to.pop(node, None)
+        for app_id, peers in self.full_seeders.items():
+            if node in peers:
+                peers.discard(node)
+                self._pool_changed(app_id)
         for peers in self.interested.values():
             peers.discard(node)
         for peers in self.unchoked.values():
@@ -167,6 +325,8 @@ class PieceExchange:
         for peers in self.unchoked_by.values():
             peers.discard(node)
         for peers in self.interest_sent.values():
+            peers.discard(node)
+        for peers in self.swarm_peers.values():
             peers.discard(node)
         for queued in self.queued_reqs.values():
             queued.pop(node, None)
@@ -185,11 +345,12 @@ class PieceExchange:
     def bitfield_mask(self, app_id: str) -> int:
         if app_id in self.complete:
             manifest = self.manifests.get(app_id)
-            return (1 << manifest.n_pieces) - 1 if manifest else 0
+            return manifest.full_mask if manifest else 0
         inv = self.inventories.get(app_id)
         return inv.bitfield() if inv else 0
 
-    def image_bytes(self, app_id: str) -> Optional[bytes]:
+    def image_bytes(self, app_id: str) -> Optional[memoryview]:
+        """Zero-copy view of the app's real image (None for synthetic)."""
         return self.image_src.get(app_id)
 
     def seed_load(self, app_id: str) -> int:
@@ -206,8 +367,9 @@ class PieceExchange:
         manifest = self.manifests.get(app_id)
         if manifest is None:
             return None
-        if app_id in self.image_src:
-            return self.image_src[app_id]
+        src = self.image_src.get(app_id)
+        if src is not None:
+            return bytes(src)
         store = self.store.get(app_id, {})
         if len(store) == manifest.n_pieces:
             return b"".join(store[p] for p in range(manifest.n_pieces))
@@ -215,34 +377,114 @@ class PieceExchange:
             return self.dirs.assemble_image(app_id, manifest.n_pieces)
         return None
 
-    # ========================= piece selection ========================== #
-    def _avail(self, app_id: str) -> Dict[int, int]:
+    # ============ incremental availability / holder index =============== #
+    def _pool_changed(self, app_id: str) -> None:
+        """Swarm membership changed: drop the cached holder pool and allow
+        a fresh INTERESTED pass toward any new holders."""
+        self._pool_cache.pop(app_id, None)
+        self._interest_clean.discard(app_id)
+
+    def _ban(self, app_id: str, peer: str) -> None:
+        self.bad_peers[app_id].add(peer)
+        self._pool_changed(app_id)
+
+    def _arrays(self, app_id: str):
+        """The availability count array and per-piece holder index; built
+        lazily (HAVE announces may precede the manifest) and maintained
+        incrementally afterwards."""
+        counts = self._counts.get(app_id)
+        if counts is None:
+            manifest = self.manifests.get(app_id)
+            if manifest is None:
+                return None, None
+            n = manifest.n_pieces
+            counts = np.zeros(n, dtype=np.int32)
+            holders: List[Set[str]] = [set() for _ in range(n)]
+            full = manifest.full_mask
+            for peer, mask in self.peer_masks.get(app_id, {}).items():
+                for p in iter_bits(mask & full):
+                    counts[p] += 1
+                    holders[p].add(peer)
+                if mask & full == full:
+                    # a peer whose completing announce arrived before the
+                    # manifest was known is recognised as a seeder now —
+                    # the per-announce promotion check only runs on deltas
+                    self._promote_full_seeder(app_id, peer)
+            self._counts[app_id] = counts
+            self._piece_holders[app_id] = holders
+        return counts, self._piece_holders.get(app_id)
+
+    def avail_array(self, app_id: str) -> Optional[np.ndarray]:
+        """Current per-piece availability (partial holders + full seeders)
+        as int32 — the incrementally maintained structure the differential
+        tests compare against `_avail_naive`."""
+        counts, _ = self._arrays(app_id)
+        if counts is None:
+            return None
+        return counts + np.int32(len(self.full_seeders.get(app_id, ())))
+
+    def _avail_naive(self, app_id: str) -> Dict[int, int]:
+        """Reference (pre-optimization) availability map: full O(P·N)
+        rebuild from the stored peer masks."""
         n_full = len(self.full_seeders.get(app_id, ()))
         avail: Dict[int, int] = collections.defaultdict(lambda: 0)
         manifest = self.manifests.get(app_id)
+        full = None
         if manifest is not None:
+            full = manifest.full_mask
             for p in range(manifest.n_pieces):
                 avail[p] = n_full
-        for have in self.peer_pieces.get(app_id, {}).values():
-            for p in have:
+        for mask in self.peer_masks.get(app_id, {}).values():
+            if full is not None:
+                mask &= full
+            for p in iter_bits(mask):
                 avail[p] += 1
         return avail
 
+    # ========================= piece selection ========================== #
     def _holder_pool(self, app_id: str) -> Set[str]:
         """Peers holding at least one piece (full seeders + partial
-        holders), excluding ourselves and banned peers."""
-        pool = set(self.full_seeders.get(app_id, ()))
-        for peer, have in self.peer_pieces.get(app_id, {}).items():
-            if have:
-                pool.add(peer)
-        pool.discard(self.node_id)
-        return pool - self.bad_peers.get(app_id, set())
+        holders), excluding ourselves and banned peers.  Cached until the
+        membership changes; callers must not mutate the returned set."""
+        pool = self._pool_cache.get(app_id)
+        if pool is None:
+            pool = set(self.full_seeders.get(app_id, ()))
+            for peer, mask in self.peer_masks.get(app_id, {}).items():
+                if mask:
+                    pool.add(peer)
+            pool.discard(self.node_id)
+            pool -= self.bad_peers.get(app_id, set())
+            self._pool_cache[app_id] = pool
+        return pool
 
     def _holders(self, app_id: str, piece_id: int) -> List[str]:
+        """Peers this node may fetch `piece_id` from, via the per-piece
+        holder index (full seeders hold everything by definition)."""
+        if not self.use_incremental:
+            return self._holders_naive(app_id, piece_id)
+        cands = set(self.full_seeders.get(app_id, ()))
+        _, holders = self._arrays(app_id)
+        if holders is not None:
+            cands |= holders[piece_id]
+        cands.discard(self.node_id)
+        bad = self.bad_peers.get(app_id)
+        if bad:
+            cands -= bad
+        return sorted(cands)
+
+    def _holders_naive(self, app_id: str, piece_id: int) -> List[str]:
+        """Reference holder scan: rebuilds the pool and tests each member
+        for the piece, as the pre-index implementation did."""
         full = self.full_seeders.get(app_id, ())
-        by_peer = self.peer_pieces.get(app_id, {})
-        return sorted(p for p in self._holder_pool(app_id)
-                      if p in full or piece_id in by_peer.get(p, ()))
+        by_peer = self.peer_masks.get(app_id, {})
+        pool = set(full)
+        for peer, mask in by_peer.items():
+            if mask:
+                pool.add(peer)
+        pool.discard(self.node_id)
+        pool -= self.bad_peers.get(app_id, set())
+        return sorted(p for p in pool
+                      if p in full or (by_peer.get(p, 0) >> piece_id) & 1)
 
     def _usable(self, app_id: str, peer: str) -> bool:
         """May we address a normal (non-endgame) request to `peer`?
@@ -263,39 +505,95 @@ class PieceExchange:
 
     def pump(self, app_id: str) -> None:
         """Issue PIECE_REQs, rarest-first, to the least-loaded unchoked
-        holders; fall into endgame when everything missing is in flight."""
+        holders; fall into endgame when everything missing is in flight.
+
+        Cost per call is O(P log P) (argsort of the maintained count
+        array) plus O(1) per issued request — and O(1) outright when the
+        pipeline is already full, which is the common case for the pumps
+        triggered by every HAVE announce in a busy swarm."""
+        if not self.use_incremental:
+            return self._pump_reference(app_id)
+        inv = self.inventories.get(app_id)
+        if inv is None or inv.complete:
+            return
+        if app_id not in self._interest_clean:
+            self._express_interest(app_id)
+            self._interest_clean.add(app_id)
+        pending = self.pending[app_id]
+        n_pieces = inv.manifest.n_pieces
+        if (len(pending) < self.cfg.piece_pipeline
+                and n_pieces - len(inv.have) > len(pending)):
+            # at most one in-flight request per holder: committing several
+            # pieces to one uplink queues them behind each other while
+            # other holders idle, and starves the seeder-egress reduction
+            busy = {peer for asked in pending.values() for peer in asked}
+            usable = (self.unchoked_by[app_id]
+                      & self._holder_pool(app_id)) - busy
+            if usable:
+                missing = [p for p in inv.missing() if p not in pending]
+                counts, holders = self._arrays(app_id)
+                # stable per-node offset staggers tie-breaks so leechers
+                # start on different pieces (random-first-piece,
+                # deterministically)
+                off = sum(ord(c) for c in self.node_id + app_id)
+                # full seeders add the same constant to every piece's
+                # availability, so sorting on partial counts alone
+                # preserves the rarest-first order
+                order = rarest_first_order_np(missing, counts, offset=off,
+                                              n_pieces=n_pieces)
+                usable_full = usable & self.full_seeders.get(app_id, set())
+                now = self.now()
+                for piece_id in order:
+                    if (len(pending) >= self.cfg.piece_pipeline
+                            or not usable):
+                        break
+                    cands = usable_full | (usable & holders[piece_id])
+                    if not cands:
+                        continue
+                    peer = min(cands, key=lambda h: (
+                        self.peer_load.get(h, 0), h))
+                    pending[piece_id] = {peer: now}
+                    usable.discard(peer)
+                    usable_full.discard(peer)
+                    self.peer_load[peer] += 1
+                    self._send_req(app_id, piece_id, peer)
+        # endgame only once real progress exists AND everything still
+        # missing is already in flight: duplicating the very first
+        # requests (e.g. a one-piece image) would multiply seeder egress
+        # for transfers that are not tail-latency bound at all
+        if (self.cfg.endgame and pending and inv.have
+                and n_pieces - len(inv.have) == len(pending)):
+            self._endgame(app_id)
+
+    def _pump_reference(self, app_id: str) -> None:
+        """The pre-optimization pump: full availability rebuild and
+        per-piece holder-pool rescans, O(P·N) per call.  Kept verbatim so
+        the differential tests can assert the fast path issues identical
+        requests and the micro-benchmark has an honest baseline."""
         inv = self.inventories.get(app_id)
         if inv is None or inv.complete:
             return
         self._express_interest(app_id)
         pending = self.pending[app_id]
         missing = [p for p in inv.missing() if p not in pending]
-        # stable per-node offset staggers tie-breaks so leechers start on
-        # different pieces (random-first-piece, deterministically)
         off = sum(ord(c) for c in self.node_id + app_id)
-        order = rarest_first_order(missing, self._avail(app_id), offset=off,
+        order = rarest_first_order(missing, self._avail_naive(app_id),
+                                   offset=off,
                                    n_pieces=inv.manifest.n_pieces)
         now = self.now()
-        # at most one in-flight request per holder: committing several
-        # pieces to one uplink queues them behind each other while other
-        # holders idle, and starves the seeder-egress reduction
         busy = {peer for asked in pending.values() for peer in asked}
         for piece_id in order:
             if len(pending) >= self.cfg.piece_pipeline:
                 break
-            holders = [h for h in self._holders(app_id, piece_id)
+            holders = [h for h in self._holders_naive(app_id, piece_id)
                        if h not in busy and self._usable(app_id, h)]
             if not holders:
                 continue
-            peer = min(holders, key=lambda h: (self.peer_load[h], h))
+            peer = min(holders, key=lambda h: (self.peer_load.get(h, 0), h))
             pending[piece_id] = {peer: now}
             busy.add(peer)
             self.peer_load[peer] += 1
             self._send_req(app_id, piece_id, peer)
-        # endgame only once real progress exists AND everything still
-        # missing is already in flight: duplicating the very first
-        # requests (e.g. a one-piece image) would multiply seeder egress
-        # for transfers that are not tail-latency bound at all
         if (self.cfg.endgame and pending and inv.have and not
                 [p for p in inv.missing() if p not in pending]):
             self._endgame(app_id)
@@ -328,19 +626,53 @@ class PieceExchange:
 
     # ======================== message handlers ========================== #
     def _note_peer_mask(self, app_id: str, peer: str,
-                        mask: Optional[int]) -> None:
+                        mask: Optional[int]) -> bool:
+        """Merge a peer's HAVE bitmask into the swarm state, updating the
+        availability counts and holder index incrementally.  Returns True
+        when availability actually changed, so callers can skip redundant
+        pumps on no-op announces."""
         if mask is None or peer == self.node_id:
-            return
-        known = self.peer_pieces[app_id].setdefault(peer, set())
-        known |= pieces_of(mask)
+            return False
+        masks = self.peer_masks[app_id]
+        old = masks.get(peer, 0)
+        if old | mask == old:
+            # no new bits — the common case once a swarm warms up; only
+            # record first contact (a join announce with an empty mask)
+            if peer not in masks:
+                masks[peer] = old
+            return False
         manifest = self.manifests.get(app_id)
-        if manifest is not None and len(known) >= manifest.n_pieces:
-            # the peer completed the image: it is a seeder now, not a
-            # leecher — release any upload slot it held
+        if manifest is not None:
+            mask &= manifest.full_mask           # ignore out-of-range bits
+        new = old | mask
+        masks[peer] = new
+        delta = new & ~old
+        if not delta:
+            return False
+        counts = self._counts.get(app_id)
+        if counts is not None:
+            holders = self._piece_holders[app_id]
+            for p in iter_bits(delta):
+                counts[p] += 1
+                holders[p].add(peer)
+        if old == 0:
+            self._pool_changed(app_id)           # a new holder appeared
+        # promotion must ignore any out-of-range bits stored while the
+        # manifest was still unknown
+        if manifest is not None \
+                and new & manifest.full_mask == manifest.full_mask:
+            self._promote_full_seeder(app_id, peer)
+        return True
+
+    def _promote_full_seeder(self, app_id: str, peer: str) -> None:
+        """The peer completed the image: it is a seeder now, not a
+        leecher — release any upload slot it held."""
+        if peer not in self.full_seeders[app_id]:
             self.full_seeders[app_id].add(peer)
-            self.interested[app_id].discard(peer)
-            self.unchoked[app_id].discard(peer)
-            self.queued_reqs[app_id].pop(peer, None)
+            self._pool_changed(app_id)
+        self.interested[app_id].discard(peer)
+        self.unchoked[app_id].discard(peer)
+        self.queued_reqs[app_id].pop(peer, None)
 
     def _have_msg(self, app_id: str, peer: Optional[str] = None) -> Msg:
         mask = self.bitfield_mask(app_id)
@@ -351,24 +683,29 @@ class PieceExchange:
                    size_bytes=96 + mask_nbytes(mask))
 
     def on_have(self, msg: Msg) -> None:
-        app_id = msg.payload["app_id"]
+        payload = msg.payload
+        app_id = payload["app_id"]
         # the tracker relays announces with the originating peer attached
-        peer = msg.payload.get("peer", msg.src)
+        peer = payload.get("peer", msg.src)
         if peer == self.node_id:
             return
         self.swarm_peers[app_id].add(peer)
-        self._note_peer_mask(app_id, peer, msg.payload.get("mask", 0))
-        known = self.peer_pieces[app_id].get(peer, set())
+        changed = self._note_peer_mask(app_id, peer, payload.get("mask", 0))
         # requests outstanding at a peer that turns out to lack the piece
         # are re-routed right away
-        pending = self.pending[app_id]
-        for piece_id, asked in list(pending.items()):
-            if peer in asked and piece_id not in known:
-                del asked[peer]
-                self.peer_load[peer] = max(0, self.peer_load[peer] - 1)
-                if not asked:
-                    del pending[piece_id]
-        if app_id in self.fetching:
+        pending = self.pending.get(app_id)
+        rerouted = False
+        if pending:
+            known = self.peer_masks[app_id].get(peer, 0)
+            for piece_id, asked in list(pending.items()):
+                if peer in asked and not (known >> piece_id) & 1:
+                    del asked[peer]
+                    self.peer_load[peer] = max(0, self.peer_load[peer] - 1)
+                    rerouted = True
+                    if not asked:
+                        del pending[piece_id]
+        # a HAVE that changed nothing cannot change pump's decision either
+        if (changed or rerouted) and app_id in self.fetching:
             self.pump(app_id)
 
     def on_interested(self, msg: Msg) -> None:
@@ -408,11 +745,36 @@ class PieceExchange:
         self.send(peer, Msg(CHOKE, self.node_id,
                             {"app_id": app_id}, size_bytes=64))
 
+    # --------------------- reciprocity accounting ----------------------- #
+    def _credit_from(self, peer: str, nbytes: int) -> None:
+        """Account verified piece payload received from `peer`."""
+        self.bytes_from[peer] += nbytes
+        est = self.rate_from.get(peer)
+        if est is None:
+            est = self.rate_from[peer] = RollingRate(self._rate_window)
+        est.add(self.now(), nbytes)
+
+    def _credit_to(self, peer: str, nbytes: int) -> None:
+        """Account piece payload served to `peer`."""
+        self.bytes_to[peer] += nbytes
+        est = self.rate_to.get(peer)
+        if est is None:
+            est = self.rate_to[peer] = RollingRate(self._rate_window)
+        est.add(self.now(), nbytes)
+
+    def _rate(self, table: Dict[str, RollingRate], peer: str,
+              now: float) -> float:
+        est = table.get(peer)
+        return est.rate(now) if est is not None else 0.0
+
     def rechoke(self) -> None:
-        """Periodic re-choke: keep the best reciprocators (bytes received
-        from the peer, then bytes served to it — a seeder's proxy for the
-        peer's drain rate) in the regular slots and rotate one optimistic
-        unchoke through the rest so new peers can bootstrap."""
+        """Periodic re-choke: keep the best reciprocators (rolling-window
+        byte rate received from the peer, then rate served to it — a
+        seeder's proxy for the peer's drain rate) in the regular slots and
+        rotate one optimistic unchoke through the rest so new peers can
+        bootstrap.  Ranking on *rates* rather than lifetime totals means a
+        historically fast but now-idle peer loses its slot within one
+        window instead of dominating rechoke decisions forever."""
         if not self.cfg.choke:
             return
         self._rechoke_round += 1
@@ -428,8 +790,10 @@ class PieceExchange:
             new = set(cands)
             self.opt_unchoked.pop(app_id, None)
         else:
-            ranked = sorted(cands, key=lambda p: (-self.bytes_from[p],
-                                                  -self.bytes_to[p], p))
+            now = self.now()
+            ranked = sorted(cands, key=lambda p: (
+                -self._rate(self.rate_from, p, now),
+                -self._rate(self.rate_to, p, now), p))
             new = set(ranked[:slots - 1])
             rest = sorted(cands - new)
             opt = self.opt_unchoked.get(app_id)
@@ -500,7 +864,9 @@ class PieceExchange:
             return
         self._serve(app_id, peer, piece_id)
 
-    def _piece_payload(self, app_id: str, piece_id: int) -> Optional[bytes]:
+    def _piece_payload(self, app_id: str, piece_id: int):
+        """The piece's payload as a zero-copy view over the shared image
+        buffer (or the stored/cached slice for partial holders)."""
         image = self.image_src.get(app_id)
         if image is not None:
             manifest = self.manifests[app_id]
@@ -519,7 +885,7 @@ class PieceExchange:
         data = self._piece_payload(app_id, piece_id)
         if data is not None:
             payload["data"] = data
-        self.bytes_to[peer] += manifest.piece_size(piece_id)
+        self._credit_to(peer, manifest.piece_size(piece_id))
         self.send(peer, Msg(PIECE_DATA, self.node_id, payload,
                             size_bytes=96 + manifest.piece_size(piece_id)
                             + mask_nbytes(mask)))
@@ -549,13 +915,13 @@ class PieceExchange:
         data = msg.payload.get("data")
         if not inv.add(piece_id, msg.payload.get("proof"), data=data):
             # corrupt piece: never ask this peer again, fetch elsewhere
-            self.bad_peers[app_id].add(peer)
+            self._ban(app_id, peer)
             self.unchoked_by[app_id].discard(peer)
             self.pump(app_id)
             return
         manifest = inv.manifest
         nbytes = manifest.piece_size(piece_id)
-        self.bytes_from[peer] += nbytes
+        self._credit_from(peer, nbytes)
         self.pieces_from[app_id][peer] += 1
         if data is not None:
             self.store[app_id][piece_id] = data
@@ -569,11 +935,14 @@ class PieceExchange:
         # relay alone would suffice for reach, but the extra hop delays
         # rarity information enough to push measurably more piece traffic
         # back onto the origin; the ~bitmask-sized announces are cheap next
-        # to the pieces they steer.
+        # to the pieces they steer.  One Msg serves the whole burst — the
+        # payload is identical for every target (receivers treat payloads
+        # as read-only, like the tracker's relays).
+        announce = self._have_msg(app_id)
         for target in sorted(self.swarm_peers[app_id] - {peer,
                                                          self.node_id}):
-            self.send(target, self._have_msg(app_id))
-        self.send(self.tracker_id, self._have_msg(app_id))
+            self.send(target, announce)
+        self.send(self.tracker_id, announce)
         if inv.complete:
             self._complete_fetch(app_id)
         else:
@@ -594,7 +963,9 @@ class PieceExchange:
 
     def _complete_fetch(self, app_id: str) -> None:
         """All pieces verified: reassemble real images, cache the Seed
-        copy, and hand the agent the keys to the executable."""
+        copy, and hand the agent the keys to the executable.  Real images
+        are interned by manifest hash so every replica in a simulation
+        shares one buffer instead of materialising its own copy."""
         inv = self.inventories[app_id]
         self.complete.add(app_id)
         self.fetching.discard(app_id)
@@ -602,10 +973,15 @@ class PieceExchange:
             self._reconcile(app_id, piece_id)
         image = None
         if inv.manifest.content_hashed:
-            image = self.assembled_image(app_id)   # store or disk cache
+            mh = inv.manifest.manifest_hash
+            image = _IMAGE_INTERN.get(mh)
+            if image is None:
+                assembled = self.assembled_image(app_id)  # store or disk
+                if assembled is not None:
+                    image = intern_image(mh, assembled)
             if image is not None:
-                self.image_src[app_id] = image
-                # the joined image supersedes the per-piece slices
+                self.image_src[app_id] = memoryview(image)
+                # the shared image supersedes the per-piece slices
                 self.store.pop(app_id, None)
                 if self.dirs is not None:
                     self.dirs.save_seed_image(app_id, image)
@@ -622,8 +998,7 @@ class PieceExchange:
             for peer, t in list(asked.items()):
                 if now - t > stall_s:
                     del asked[peer]
-                    self.peer_load[peer] = max(0,
-                                               self.peer_load[peer] - 1)
+                    self.peer_load[peer] = max(0, self.peer_load[peer] - 1)
                     # the holder may have the request parked in its choke
                     # queue (endgame): withdraw it, or it inflates the
                     # load the holder reports to the tracker forever
@@ -636,4 +1011,5 @@ class PieceExchange:
         # allow a fresh INTERESTED round toward holders that never answered
         if app_id in self.fetching and not self.unchoked_by[app_id]:
             self.interest_sent[app_id].clear()
+            self._interest_clean.discard(app_id)
         self.pump(app_id)

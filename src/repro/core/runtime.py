@@ -112,9 +112,18 @@ class SimRuntime(Runtime):
         self.link = link or LinkModel()
         self._t = 0.0
         self._seq = itertools.count()
-        self._heap: List[Tuple[float, int, Callable[[], None]]] = []
-        self._cancelled: set = set()
+        # event heap entries are (time, seq, bound_method, args) tuples —
+        # no per-event closure allocation on the send/timer hot paths
+        self._heap: List[Tuple[float, int, Callable, tuple]] = []
+        # timer cancellation by version counter: the scheduled event
+        # carries the version it was armed with and fires only while it is
+        # still current.  Unlike the old tombstone set (which grew with
+        # every cancel until the same timer was re-armed), this stays at
+        # one dict entry per live (node, name) key.
+        self._timer_ver: Dict[Tuple[str, str], int] = {}
         self.speed: Dict[str, float] = {}
+        # total events executed by run() — simulator-throughput metric
+        self.events_processed = 0
         # per-node egress accounting and uplink/downlink-contention state
         self.tx_bytes: Dict[str, int] = {}
         self._uplink_free: Dict[str, float] = {}
@@ -133,8 +142,8 @@ class SimRuntime(Runtime):
     def now(self) -> float:
         return self._t
 
-    def _at(self, t: float, fn: Callable[[], None]) -> None:
-        heapq.heappush(self._heap, (t, next(self._seq), fn))
+    def _at(self, t: float, fn: Callable, args: tuple = ()) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), fn, args))
 
     def send(self, dst: str, msg: Msg) -> None:
         src = msg.src
@@ -159,7 +168,7 @@ class SimRuntime(Runtime):
             at = t + self.link.base_latency_s
         else:
             at = self._t + self.link.latency(msg.size_bytes)
-        self._at(at, lambda: self._deliver(dst, msg))
+        self._at(at, self._deliver, (dst, msg))
 
     def _deliver(self, dst: str, msg: Msg) -> None:
         node = self.nodes.get(dst)
@@ -169,22 +178,26 @@ class SimRuntime(Runtime):
     def set_timer(self, node_id: str, name: str, delay_s: float,
                   periodic: bool = False) -> None:
         key = (node_id, name)
-        self._cancelled.discard(key)
-
-        def fire():
-            if key in self._cancelled:
-                return
-            node = self.nodes.get(node_id)
-            if node is None:
-                return
-            node.on_timer(name)
-            if periodic and key not in self._cancelled:
-                self._at(self._t + delay_s, fire)
-
-        self._at(self._t + delay_s, fire)
+        ver = self._timer_ver.get(key, 0) + 1    # latest set supersedes
+        self._timer_ver[key] = ver
+        self._at(self._t + delay_s, self._fire_timer,
+                 (key, ver, delay_s, periodic))
 
     def cancel_timer(self, node_id: str, name: str) -> None:
-        self._cancelled.add((node_id, name))
+        key = (node_id, name)
+        self._timer_ver[key] = self._timer_ver.get(key, 0) + 1
+
+    def _fire_timer(self, key: Tuple[str, str], ver: int, delay_s: float,
+                    periodic: bool) -> None:
+        if self._timer_ver.get(key) != ver:
+            return                   # cancelled, or superseded by a re-set
+        node = self.nodes.get(key[0])
+        if node is None:
+            return
+        node.on_timer(key[1])
+        if periodic and self._timer_ver.get(key) == ver:
+            self._at(self._t + delay_s, self._fire_timer,
+                     (key, ver, delay_s, periodic))
 
     # ---- processor-sharing work executor ------------------------------ #
     def _ps_advance(self, node_id: str) -> None:
@@ -206,22 +219,21 @@ class SimRuntime(Runtime):
         rate = self.speed.get(node_id, 1.0) / len(jobs)
         jid, job = min(jobs.items(), key=lambda kv: kv[1][0])
         eta = self._t + max(job[0], 0.0) / rate
+        self._at(eta, self._ps_fire, (node_id, token))
 
-        def fire(tok=token, nid=node_id):
-            if self._ps_event.get(nid) != tok:
-                return                      # superseded by a newer event
-            self._ps_advance(nid)
-            jobs = self._ps_jobs.get(nid, {})
-            done = [k for k, j in jobs.items() if j[0] <= 1e-9]
-            for k in done:
-                work, tag, fn, t0 = jobs.pop(k)
-                node = self.nodes.get(nid)
-                if node is not None:
-                    result = fn() if fn is not None else None
-                    node.on_work_done(tag, result, self._t - t0)
-            self._ps_schedule(nid)
-
-        self._at(eta, fire)
+    def _ps_fire(self, node_id: str, token: int) -> None:
+        if self._ps_event.get(node_id) != token:
+            return                          # superseded by a newer event
+        self._ps_advance(node_id)
+        jobs = self._ps_jobs.get(node_id, {})
+        done = [k for k, j in jobs.items() if j[0] <= 1e-9]
+        for k in done:
+            work, tag, fn, t0 = jobs.pop(k)
+            node = self.nodes.get(node_id)
+            if node is not None:
+                result = fn() if fn is not None else None
+                node.on_work_done(tag, result, self._t - t0)
+        self._ps_schedule(node_id)
 
     def submit_work(self, node_id: str, tag: Any, fn: Callable[[], Any],
                     sim_duration_s: Optional[float] = None) -> None:
@@ -252,16 +264,17 @@ class SimRuntime(Runtime):
             stop_when: Optional[Callable[[], bool]] = None,
             max_events: int = 50_000_000) -> float:
         n = 0
-        while self._heap and n < max_events:
-            t, _, fn = self._heap[0]
-            if until is not None and t > until:
+        heap = self._heap
+        while heap and n < max_events:
+            if until is not None and heap[0][0] > until:
                 break
-            heapq.heappop(self._heap)
+            t, _, fn, args = heapq.heappop(heap)
             self._t = t
-            fn()
+            fn(*args)
             n += 1
             if stop_when is not None and n % 64 == 0 and stop_when():
                 break
+        self.events_processed += n
         return self._t
 
 
@@ -272,9 +285,13 @@ class ThreadRuntime(Runtime):
     def __init__(self, n_workers: int = 4):
         self.nodes: Dict[str, Node] = {}
         self._q: "queue.Queue" = queue.Queue()
-        self._timers: List[Tuple[float, int, str, str, float, bool]] = []
+        # (due, seq, (node, name), delay, periodic, version)
+        self._timers: List[Tuple[float, int, Tuple[str, str], float,
+                                 bool, int]] = []
         self._timer_lock = threading.Lock()
-        self._cancelled: set = set()
+        # version-counter cancellation (see SimRuntime): one entry per
+        # live timer key instead of an ever-growing tombstone set
+        self._timer_ver: Dict[Tuple[str, str], int] = {}
         self._seq = itertools.count()
         self._stop = threading.Event()
         self._work_q: "queue.Queue" = queue.Queue()
@@ -302,14 +319,16 @@ class ThreadRuntime(Runtime):
                   periodic: bool = False) -> None:
         key = (node_id, name)
         with self._timer_lock:
-            self._cancelled.discard(key)
+            ver = self._timer_ver.get(key, 0) + 1
+            self._timer_ver[key] = ver
             heapq.heappush(self._timers,
-                           (self.now() + delay_s, next(self._seq), node_id,
-                            name, delay_s, periodic))
+                           (self.now() + delay_s, next(self._seq), key,
+                            delay_s, periodic, ver))
 
     def cancel_timer(self, node_id: str, name: str) -> None:
+        key = (node_id, name)
         with self._timer_lock:
-            self._cancelled.add((node_id, name))
+            self._timer_ver[key] = self._timer_ver.get(key, 0) + 1
 
     def submit_work(self, node_id: str, tag: Any, fn: Callable[[], Any],
                     sim_duration_s: Optional[float] = None) -> None:
@@ -350,11 +369,11 @@ class ThreadRuntime(Runtime):
         fired = []
         with self._timer_lock:
             while self._timers and self._timers[0][0] <= self.now():
-                t, _, nid, name, delay, periodic = heapq.heappop(
+                t, _, key, delay, periodic, ver = heapq.heappop(
                     self._timers)
-                if (nid, name) in self._cancelled:
-                    continue
-                fired.append((nid, name))
+                if self._timer_ver.get(key) != ver:
+                    continue        # cancelled or superseded by a re-set
+                fired.append(key)
                 if periodic:
                     # re-arm from the *scheduled* time, not the (late) fire
                     # time, so periodic timers keep their grid instead of
@@ -365,8 +384,8 @@ class ThreadRuntime(Runtime):
                     if nt <= self.now():
                         nt = self.now() + delay
                     heapq.heappush(self._timers,
-                                   (nt, next(self._seq), nid,
-                                    name, delay, periodic))
+                                   (nt, next(self._seq), key,
+                                    delay, periodic, ver))
         for nid, name in fired:
             node = self.nodes.get(nid)
             if node:

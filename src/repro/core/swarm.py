@@ -18,6 +18,8 @@ import collections
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
+import numpy as np
+
 
 @dataclass
 class Transfer:
@@ -90,6 +92,28 @@ def rarest_first_order(missing: Sequence[int], avail: Dict[int, int],
             else max(missing, default=0) + 1, 1)
     return sorted(missing, key=lambda p: (avail.get(p, 0), (p + offset) % n,
                                           p))
+
+
+def rarest_first_order_np(missing: Sequence[int], counts: np.ndarray,
+                          offset: int = 0,
+                          n_pieces: Optional[int] = None) -> List[int]:
+    """Vectorized `rarest_first_order` over a per-piece count array.
+
+    `counts[p]` is piece `p`'s availability (the live engine maintains it
+    incrementally; full seeders add the same constant everywhere, so the
+    partial-holder counts alone produce the identical order).  One argsort
+    replaces the per-piece dict lookups, dropping the sort from the pump
+    hot path's profile; the scalar version above stays as the reference
+    the differential tests compare against.
+    """
+    m = np.asarray(missing, dtype=np.int64)
+    if m.size == 0:
+        return []
+    n = max(int(n_pieces) if n_pieces is not None else int(m.max()) + 1, 1)
+    c = np.asarray(counts)
+    # lexsort keys, last is primary: availability, rotated id, raw id
+    order = np.lexsort((m, (m + offset) % n, c[m]))
+    return m[order].tolist()
 
 
 def rounds_of(plan: Sequence[Transfer]) -> int:

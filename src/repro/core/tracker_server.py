@@ -63,6 +63,11 @@ class TrackerServer(Node):
         self.seeder_load: Dict[str, Dict[str, int]] = {}
         # per-app swarm membership (volunteers announcing via HAVE)
         self.swarms: Dict[str, Set[str]] = {}
+        # cached per-app HAVE-relay fan-out (sorted, for determinism):
+        # rebuilt only when membership or the seeder set changes, instead
+        # of re-deriving an O(N) target set for every announce relayed
+        self._relay_cache: Dict[str, tuple] = {}
+        self._last_push: float = -1e9
 
     # ------------------------------------------------------------------ #
     def start(self, rt: Runtime) -> None:
@@ -84,6 +89,8 @@ class TrackerServer(Node):
     def PUSH(self, dst: Optional[str] = None) -> None:
         """Send the applications list to one volunteer (or broadcast)."""
         rows = self.READ()
+        if dst is None:
+            self._last_push = self.rt.now()
         targets = [dst] if dst else list(self.members)
         for t in targets:
             self.rt.send(t, Msg(APP_LIST, self.node_id,
@@ -152,16 +159,23 @@ class TrackerServer(Node):
         app_id = msg.payload["app_id"]
         mask = msg.payload.get("mask", 0)
         swarm = self.swarms.setdefault(app_id, set())
-        swarm.add(msg.src)
-        row = self.app_list.get(app_id)
-        targets = set(swarm)
-        if row is not None:
-            targets |= set(row.seeders) | {row.host_id}
+        if msg.src not in swarm:
+            swarm.add(msg.src)
+            self._relay_cache.pop(app_id, None)
+        targets = self._relay_cache.get(app_id)
+        if targets is None:
+            t = set(swarm)
+            row = self.app_list.get(app_id)
+            if row is not None:
+                t |= set(row.seeders) | {row.host_id}
+            t.discard(self.node_id)
+            targets = self._relay_cache[app_id] = tuple(sorted(t))
         relay = Msg(HAVE, self.node_id,
                     {"app_id": app_id, "mask": mask, "peer": msg.src},
                     size_bytes=96 + mask_nbytes(mask))
-        for t in targets - {msg.src, self.node_id}:
-            self.rt.send(t, relay)
+        for t in targets:
+            if t != msg.src:
+                self.rt.send(t, relay)
 
     def _on_seeder_update(self, msg: Msg) -> None:
         """A volunteer finished (and verified) an app image: add it to the
@@ -174,12 +188,18 @@ class TrackerServer(Node):
         if seeder not in row.seeders:
             row.seeders = tuple(row.seeders) + (seeder,)
             row.updated_at = self.rt.now()
+            self._relay_cache.pop(app_id, None)
             relay = Msg(SEEDER_UPDATE, self.node_id,
                         {"app_id": app_id, "seeder": seeder}, size_bytes=96)
             for peer in set(row.seeders) | {row.host_id}:
                 if peer not in (seeder, self.node_id):
                     self.rt.send(peer, relay)
-            self.PUSH()
+            # broadcast at most once per push interval: when a whole swarm
+            # turns replica in a burst, one PUSH per completion is an
+            # O(N²) APP_LIST storm; the periodic ping-time PUSH (and the
+            # SEEDER_UPDATE relay above) still propagates the change
+            if self.rt.now() - self._last_push >= self.cfg.push_interval_s:
+                self.PUSH()
 
     def INFO(self, change: str, data) -> None:
         """Forward availability/update changes to the synchronizer."""
@@ -189,6 +209,7 @@ class TrackerServer(Node):
             member = data
             self.members.discard(member)
             self.missed.pop(member, None)
+            self._relay_cache.clear()   # membership + seeder sets change
             for loads in self.seeder_load.values():
                 loads.pop(member, None)
             for swarm in self.swarms.values():
@@ -230,6 +251,7 @@ class TrackerServer(Node):
     # ======================= synchronizer module ======================= #
     def WRITE(self, row: AppInfo) -> None:
         row.updated_at = self.rt.now()
+        self._relay_cache.pop(row.app_id, None)   # seeder set may change
         prev = self.app_list.get(row.app_id)
         if prev is not None:
             # the seeder set is tracker-owned state: merge, don't clobber

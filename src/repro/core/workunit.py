@@ -83,6 +83,11 @@ class PieceManifest:
         return _hash(self.app_id, self.piece_bytes, self.total_bytes,
                      *self.piece_hashes)
 
+    @functools.cached_property
+    def full_mask(self) -> int:
+        """Bitmask with every piece bit set (the complete-image HAVE)."""
+        return (1 << self.n_pieces) - 1
+
     def piece_size(self, piece_id: int) -> int:
         if piece_id < self.n_pieces - 1:
             return self.piece_bytes
@@ -90,12 +95,15 @@ class PieceManifest:
         return max(rem, 0)
 
     @classmethod
-    def from_bytes(cls, app_id: str, image: bytes,
+    def from_bytes(cls, app_id: str, image,
                    piece_bytes: int) -> "PieceManifest":
+        # hash through zero-copy views: building a manifest for a large
+        # image must not materialise a bytes copy per piece
+        mv = memoryview(image)
         hashes = tuple(
-            hashlib.sha1(image[i:i + piece_bytes]).hexdigest()
-            for i in range(0, max(len(image), 1), piece_bytes))
-        return cls(app_id, piece_bytes, len(image), hashes,
+            hashlib.sha1(mv[i:i + piece_bytes]).hexdigest()
+            for i in range(0, max(len(mv), 1), piece_bytes))
+        return cls(app_id, piece_bytes, len(mv), hashes,
                    content_hashed=True)
 
     @classmethod
@@ -116,9 +124,13 @@ class PieceInventory:
         self.manifest = manifest
         self.have: Set[int] = (set(range(manifest.n_pieces)) if complete
                                else set())
+        # holdings mirrored as an int bitmask so bitfield() is O(1): HAVE
+        # announces fire once per verified piece per peer, and rebuilding
+        # the mask from the set each time was O(pieces) on that hot path
+        self._mask: int = (1 << manifest.n_pieces) - 1 if complete else 0
 
     def add(self, piece_id: int, proof: Optional[str] = None,
-            data: Optional[bytes] = None) -> bool:
+            data=None) -> bool:
         """Verify a piece against the manifest; reject corrupt pieces.
 
         Real transfers pass `data` (the payload slice) and the content hash
@@ -136,6 +148,7 @@ class PieceInventory:
         if proof != self.manifest.piece_hashes[piece_id]:
             return False
         self.have.add(piece_id)
+        self._mask |= 1 << piece_id
         return True
 
     def has(self, piece_id: int) -> bool:
@@ -151,7 +164,7 @@ class PieceInventory:
 
     def bitfield(self) -> int:
         """Holdings as a compact int bitmask (bit p set <=> piece p held)."""
-        return mask_of(self.have)
+        return self._mask
 
 
 # --------------------------------------------------------------------------- #

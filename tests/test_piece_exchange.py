@@ -56,9 +56,10 @@ def test_choke_fairness_slow_leecher_cannot_monopolize_slots():
         _interested(px, "a", peer)
     # startup fast path filled the free slots first-come-first-served
     assert len(px.unchoked["a"]) == 2
-    # P2/P3 reciprocate (serve us bytes); P0/P1 contribute nothing
-    px.bytes_from["P3"] = 5_000
-    px.bytes_from["P2"] = 3_000
+    # P2/P3 reciprocate (serve us bytes, credited through the rolling-rate
+    # estimator the rechoke ranking reads); P0/P1 contribute nothing
+    px._credit_from("P3", 5_000)
+    px._credit_from("P2", 3_000)
     seen = []
     for _ in range(6):
         px.rechoke()
