@@ -45,6 +45,12 @@ def main() -> None:
                        f"{res['origin_up_mb']:.0f}MB "
                        f"{res['events_per_sec']:.0f}ev/s "
                        f"rss={res['peak_rss_mb']:.0f}MB")
+        elif name == "scenario_viii":
+            derived = (f"chaos makespan x{res['makespan_overhead']:.2f} "
+                       f"egress x{res['egress_overhead']:.2f} "
+                       f"dropped={res['chaos']['dropped_msgs']} "
+                       f"restarts={res['chaos']['restarts']} "
+                       f"replicated={res['replicated']}")
         else:
             derived = (f"speedup1={res['speedup_app1']:.2f}(3.5) "
                        f"speedup2={res['speedup_app2']:.2f}(3.3)")

@@ -39,6 +39,46 @@ def bench_scenario_vii(verbose: bool = True, n_volunteers: int = 200,
     return [row]
 
 
+def bench_scenario_viii(verbose: bool = True, n_volunteers: int = 48,
+                        image_mb: float = 32.0, seed: int = 8):
+    """Scenario VIII (chaos) as a perf-trajectory row: the same N=48
+    flash crowd fault-free vs under 10% loss / 200ms jitter / 30% churn,
+    reporting the makespan and origin-egress overhead of surviving it.
+    The chaos invariants are asserted inside scenario_viii itself."""
+    from benchmarks.paper_tables import scenario_viii
+    res = scenario_viii(verbose=False, n_volunteers=n_volunteers,
+                        image_mb=image_mb, seed=seed)
+    b, c = res["baseline"], res["chaos"]
+    row = {
+        "name": f"swarm_chaos_n{n_volunteers}_img{int(image_mb)}MB"
+                f"_seed{seed}",
+        "us_per_call": 0.0,
+        "derived": (f"makespan {b['makespan_s']:.0f}s->"
+                    f"{c['makespan_s']:.0f}s "
+                    f"(x{res['makespan_overhead']:.2f}) origin_up "
+                    f"{b['origin_up_mb']:.0f}->{c['origin_up_mb']:.0f}MB "
+                    f"dropped {c['dropped_msgs']} dup {c['dup_msgs']} "
+                    f"restarts {c['restarts']} "
+                    f"replicated={c['replicated']}"),
+        "metrics": {
+            "seed": seed,
+            "makespan_overhead": res["makespan_overhead"],
+            "egress_overhead": res["egress_overhead"],
+            "baseline_makespan_s": b["makespan_s"],
+            "chaos_makespan_s": c["makespan_s"],
+            "dropped_msgs": c["dropped_msgs"],
+            "dup_msgs": c["dup_msgs"],
+            "crashes": c["crashes"],
+            "restarts": c["restarts"],
+            "replicated": c["replicated"],
+            "invariants_ok": res["invariants_ok"],
+        },
+    }
+    if verbose:
+        print(f"[swarm] {row['name']}: {row['derived']}")
+    return [row]
+
+
 def bench_live(verbose: bool = True, n_volunteers: int = 8,
                image_mb: float = 32.0):
     """Scenarios V + VI through the real protocol (smaller than
@@ -120,6 +160,10 @@ def bench(verbose: bool = True, smoke: bool = False):
     from benchmarks import exchange_bench
     rows += bench_scenario_vii(verbose=verbose, n_volunteers=64)
     rows += bench_scenario_vii(verbose=verbose, n_volunteers=200)
+    # Scenario VIII chaos rows ride along at full N=48 even in smoke: the
+    # fault-tolerance overhead is a tracked trajectory metric like the
+    # flash-crowd numbers above
+    rows += bench_scenario_viii(verbose=verbose)
     # pump micro-benchmark: the ≥10x incremental-vs-reference ratio is the
     # acceptance gate for the bookkeeping rewrite
     rows += exchange_bench.bench(verbose=verbose, smoke=smoke)

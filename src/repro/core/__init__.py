@@ -1,4 +1,7 @@
 from repro.core.agent import Agent, AgentConfig  # noqa: F401
+from repro.core.chaos import ChaosScenario, make_chaos_plan  # noqa: F401
+from repro.core.faults import (Crash, FaultPlan, LinkFault,  # noqa: F401
+                               Partition)
 from repro.core.messages import AppInfo, Msg  # noqa: F401
 from repro.core.metrics import AppMetrics, complexity_hint  # noqa: F401
 from repro.core.piece_exchange import (PieceExchange,  # noqa: F401

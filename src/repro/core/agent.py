@@ -75,6 +75,24 @@ class AgentConfig:
     # rolling window for the rechoke ranking's byte-rate estimate: peers
     # are ranked by bytes moved in the last window, not lifetime totals
     rate_window_s: float = 20.0
+    # --- fault recovery (chaos hardening, see docs "Fault model") ------ #
+    # staleness threshold for the pending-PIECE_REQ sweep (a lost request
+    # or reply is re-issued after this); None keeps the conservative
+    # default of work_timeout_s, which sits above any legitimate bulk
+    # queueing delay
+    piece_timeout_s: Optional[float] = None
+    # re-send REGISTER after this much tracker silence: a lost REGISTER
+    # (or a membership drop while partitioned) otherwise leaves the agent
+    # off the tracker's push list forever
+    reregister_s: float = 30.0
+    # periodic re-gossip of validated parts to the other seeders; repairs
+    # lost PART_DONE messages so seeder done-sets re-converge.  None (the
+    # default) disables it — chaos scenarios turn it on.
+    gossip_interval_s: Optional[float] = None
+    # fetch swarm images even when the app's work is already finished
+    # (pure replication, BitTorrent-style seeding): lets a volunteer that
+    # crash-restarted after completion still converge to a full replica
+    replicate_completed: bool = False
 
 
 class Agent(Node):
@@ -104,6 +122,10 @@ class Agent(Node):
         self.leech_time: Dict[str, float] = collections.defaultdict(float)
         self.leech_bytes: Dict[str, float] = collections.defaultdict(float)
         self.stopped_apps: Set[str] = set()
+        # quorum size at the moment each part validated here (chaos
+        # invariant: never more than m_min + 1 voters decide a part)
+        self.quorum_sizes: Dict[tuple, int] = {}
+        self._last_server = 0.0         # last message seen from the tracker
         self.dry_until: Dict[str, float] = {}
         self.completed_at: Dict[str, float] = {}
         self.no_work_from: Dict[str, Set[str]] = collections.defaultdict(set)
@@ -157,8 +179,16 @@ class Agent(Node):
 
     def start(self, rt: Runtime) -> None:
         super().start(rt)
+        self._last_server = rt.now()
+        # boot nonce: stable for this process incarnation, different after
+        # a crash-restart — the tracker uses it to tell "same agent
+        # re-registering" from "fresh process that lost its state" and
+        # drops the stale seeder claims of the latter
+        if not hasattr(self, "_boot"):
+            self._boot = rt.now()
         self.SEND(self.server_id, Msg(REGISTER, self.node_id,
-                                      {"apps": self._self_rows()}))
+                                      {"apps": self._self_rows(),
+                                       "boot": self._boot}))
         rt.set_timer(self.node_id, "status", self.cfg.status_interval_s,
                      periodic=True)
         rt.set_timer(self.node_id, "tail", self.cfg.work_timeout_s / 2,
@@ -166,6 +196,9 @@ class Agent(Node):
         if self.cfg.choke:
             rt.set_timer(self.node_id, "rechoke",
                          self.cfg.rechoke_interval_s, periodic=True)
+        if self.cfg.gossip_interval_s:
+            rt.set_timer(self.node_id, "gossip",
+                         self.cfg.gossip_interval_s, periodic=True)
 
     def shutdown(self) -> None:
         """Graceful leave: BYE tells the server to reclaim this volunteer's
@@ -208,6 +241,8 @@ class Agent(Node):
             return
         if msg.src in self.cfg.deny_from:
             return
+        if msg.src == self.server_id:
+            self._last_server = self.rt.now()
         kind = msg.kind
         # swarm data-plane kinds first: HAVE announces alone are O(N) per
         # verified piece, so they dominate the dispatch at scale
@@ -426,6 +461,8 @@ class Agent(Node):
                                        quorum=app.m_min)
             if ok:
                 part.done = True
+                part.winner = winner
+                self.quorum_sizes[(app_id, part_id)] = len(part.results)
                 m = self.metrics.get(app_id)
                 if m is not None:
                     m.record_cycle(
@@ -509,6 +546,15 @@ class Agent(Node):
         peers.discard(self.node_id)
         return peers
 
+    def _done_parts(self, app) -> List[tuple]:
+        """(part_id, validated winner) for every done part — the payload
+        PART_DONE syncs carry.  `winner` is the majority_vote result;
+        falling back to the first recorded vote only covers parts from
+        pre-`winner` state (e.g. a restore)."""
+        return [(p.part_id, p.winner if p.winner is not None
+                 else (p.results[0][1] if p.results else None))
+                for p in app.parts if p.done]
+
     def _gossip_part_done(self, app_id: str,
                           parts: List[tuple]) -> None:
         for peer in self._other_seeders(app_id):
@@ -525,6 +571,7 @@ class Agent(Node):
             part = app.parts[part_id]
             if not part.done:
                 part.done = True
+                part.winner = winner
                 part.results.append((msg.src, winner, 0.0))
                 # another seeder validated it first: any lease this seeder
                 # still holds for the part is a duplicate — cancel it
@@ -554,8 +601,7 @@ class Agent(Node):
                    or (row is not None and row.host_id == self.node_id))
         if not is_host and self.node_id not in ring[:3]:
             return
-        done = [(p.part_id, (p.results[0][1] if p.results else None))
-                for p in app.parts if p.done]
+        done = self._done_parts(app)
         if done:
             self.SEND(new_seeder, Msg(PART_DONE, self.node_id,
                                       {"app_id": app_id, "parts": done},
@@ -724,11 +770,23 @@ class Agent(Node):
         return False
 
     def _on_app_list(self, rows: List[AppInfo]) -> None:
+        # an app the tracker advertises again revives: DROP_APP meant "gone
+        # now", not "gone forever" — its host may have returned from a
+        # crash-restart or a partition-induced false drop
+        self.stopped_apps -= {r.app_id for r in rows}
         self.app_list = [r for r in rows if r.app_id not in self.stopped_apps]
         for row in self.app_list:
             if row.manifest is not None:
                 self.px.note_full_seeders(row.app_id,
                                           set(row.seeders) | {row.host_id})
+                if (row.app_id in self.replicas
+                        and self.node_id not in row.seeders):
+                    # our SEEDER_UPDATE was lost (or we were dropped while
+                    # partitioned): repeat it — the tracker is idempotent
+                    self.SEND(self.server_id,
+                              Msg(SEEDER_UPDATE, self.node_id,
+                                  {"app_id": row.app_id,
+                                   "seeder": self.node_id}, size_bytes=96))
             # tracker promoted this node from replica to host (origin died)
             if row.host_id == self.node_id and row.app_id in self.replicas:
                 app = self.replicas.pop(row.app_id)
@@ -759,7 +817,10 @@ class Agent(Node):
                 continue
             if row.app_id in self.current:
                 continue
-            if row.parts_remaining == 0 and row.p > 0:
+            if row.parts_remaining == 0 and row.p > 0 \
+                    and not (self.cfg.replicate_completed
+                             and row.manifest is not None
+                             and row.app_id not in self.images):
                 continue    # host reported it complete
             if self.dry_until.get(row.app_id, -1.0) > now:
                 continue    # backing off after NO_WORK
@@ -873,15 +934,26 @@ class Agent(Node):
         # the threshold must sit above any legitimate queueing delay of a
         # bulk APP_DATA/PIECE_DATA transfer (a saturated seeder uplink can
         # hold a reply for a long while) — use the TAIL timescale, same as
-        # the seeders' own lease expiry
+        # the seeders' own lease expiry.  Chaos deployments set the
+        # dedicated piece_timeout_s lower so lossy links re-request fast.
         stall = self.cfg.work_timeout_s
+        piece_stall = self.cfg.piece_timeout_s or stall
         for app_id, ctx in list(self.current.items()):
             if ctx.get("fetching"):
-                self.px.recover(app_id, stall)
+                self.px.recover(app_id, piece_stall)
             elif not ctx.get("busy") and now - ctx.get("last_req",
                                                        0.0) > stall:
                 self.no_work_from.pop(app_id, None)
                 self._request_work(app_id)
+        if now - self._last_server > self.cfg.reregister_s:
+            # tracker silence: our REGISTER was lost, or the tracker
+            # false-dropped us while our PONGs were dying on a lossy link.
+            # Either way it no longer pushes us APP_LISTs — re-register
+            # (idempotent at the tracker, throttled to once per window).
+            self._last_server = now
+            self.SEND(self.server_id, Msg(REGISTER, self.node_id,
+                                          {"apps": self._self_rows(),
+                                           "boot": self._boot}))
 
     def on_message(self, msg: Msg) -> None:
         self.RECV(msg)
@@ -897,5 +969,19 @@ class Agent(Node):
             self.TAIL()
         elif name == "rechoke":
             self.px.rechoke()
+        elif name == "gossip":
+            self._regossip()
         elif name == "retry":
             self._maybe_start_work()
+
+    def _regossip(self) -> None:
+        """Periodic PART_DONE re-gossip (gossip_interval_s): the done sets
+        of the seeder ring re-converge even when individual gossip
+        messages were lost to the network — receivers are idempotent."""
+        for app_id in list(self.apps) + list(self.replicas):
+            app = self._seeded_app(app_id)
+            if app is None or not app.swarm:
+                continue
+            done = self._done_parts(app)
+            if done:
+                self._gossip_part_done(app_id, done)

@@ -1,0 +1,243 @@
+"""ChaosScenario: seeded fault-injection runs of the live swarm protocol.
+
+One class builds the standard chaos experiment — tracker + origin host +
+N volunteers leeching a swarm application over a SimRuntime with a
+`FaultPlan` (core.faults): lossy links, duplicated/reordered messages,
+timed partitions and volunteer crash/restart churn.  Crashed volunteers
+restart as *fresh incarnations* (restart factories), so volatile state
+dies with them and only an on-disk piece cache (when `root_dir` is set)
+survives into the PR 3 rescan path.
+
+`check_invariants()` asserts the convergence properties every fault trace
+must preserve:
+
+  * the application completes and every surviving volunteer converges to
+    the byte-identical image (manifest-hash identity for synthetic ones);
+  * no part is ever decided by a quorum larger than m_min + 1;
+  * the incremental availability bookkeeping equals a naive recompute
+    from the stored peer masks at every surviving node.
+
+Used by tests/test_chaos.py (20-seed suite + hypothesis property test)
+and benchmarks/paper_tables.scenario_viii.  A failing seed reproduces
+with:  PYTHONPATH=src python -m repro.core.chaos --seed N --check
+"""
+from __future__ import annotations
+
+import random
+from typing import Dict, List, Optional
+
+from repro.core.agent import Agent, AgentConfig
+from repro.core.faults import Crash, FaultPlan, LinkFault, Partition
+from repro.core.runtime import LinkModel, SimRuntime
+from repro.core.tracker_server import TrackerConfig, TrackerServer
+from repro.core.workunit import make_prime_app
+
+
+def make_chaos_plan(seed: int, volunteers: List[str], *,
+                    horizon_s: float,
+                    loss: float = 0.10, dup: float = 0.02,
+                    jitter_s: float = 0.2, churn: float = 0.25,
+                    n_partitions: int = 1,
+                    partition_s: float = 20.0) -> FaultPlan:
+    """Derive a FaultPlan from a seed and a few knobs.  All randomness
+    comes from `random.Random(seed)`, so (seed, knobs) pins the plan:
+    `churn` of the volunteers crash inside the first ~45% of `horizon_s`
+    and restart after an outage of up to 20% of it; each partition
+    isolates a random island of volunteers for `partition_s`."""
+    rng = random.Random(seed)
+    crashes = []
+    n_crash = int(round(churn * len(volunteers)))
+    for node in rng.sample(volunteers, n_crash):
+        # churn concentrated in the distribution phase: crashes land in
+        # the first ~45% of the horizon with outages up to 20% of it, so
+        # every restart still fights the swarm while it is moving pieces
+        at = rng.uniform(0.05, 0.45) * horizon_s
+        outage = rng.uniform(0.05, 0.20) * horizon_s
+        crashes.append(Crash(node, at, at + outage))
+    partitions = []
+    for _ in range(n_partitions):
+        start = rng.uniform(0.1, 0.5) * horizon_s
+        k = rng.randint(1, max(1, len(volunteers) // 4))
+        island = frozenset(rng.sample(volunteers, k))
+        partitions.append(Partition(start, start + partition_s, (island,)))
+    return FaultPlan(seed=seed,
+                     link=LinkFault(drop_p=loss, dup_p=dup,
+                                    jitter_s=jitter_s),
+                     partitions=partitions, crashes=crashes)
+
+
+def _chaos_image(nbytes: int) -> bytes:
+    return bytes((i * 89 + 17) % 256 for i in range(nbytes))
+
+
+class ChaosScenario:
+    """Build, run and verify one seeded chaos experiment."""
+
+    APP_ID = "chaos"
+
+    def __init__(self, seed: int = 0, *,
+                 n_volunteers: int = 12, n_pieces: int = 16,
+                 n_parts: int = 24, m_min: int = 2,
+                 image_bytes: int = 160_000, real_image: bool = True,
+                 loss: float = 0.10, dup: float = 0.02,
+                 jitter_s: float = 0.2, churn: float = 0.25,
+                 n_partitions: int = 1, partition_s: float = 20.0,
+                 horizon_s: float = 120.0, until_s: float = 4000.0,
+                 uplink_mbps: float = 100.0,
+                 sim_time_per_number: float = 2e-3,
+                 root_dir: Optional[str] = None,
+                 plan: Optional[FaultPlan] = None):
+        self.seed = seed
+        self.m_min = m_min
+        self.until_s = until_s
+        self.vol_ids = [f"V{i:02d}" for i in range(n_volunteers)]
+        self.plan = plan if plan is not None else make_chaos_plan(
+            seed, self.vol_ids, horizon_s=horizon_s, loss=loss, dup=dup,
+            jitter_s=jitter_s, churn=churn, n_partitions=n_partitions,
+            partition_s=partition_s)
+        self._perma_dead = {c.node for c in self.plan.crashes
+                           if c.restart_s is None}
+        link_Bps = uplink_mbps * 1e6 / 8
+        self.rt = SimRuntime(link=LinkModel(uplink_Bps=link_Bps,
+                                            downlink_Bps=link_Bps),
+                             faults=self.plan)
+        self.rt.add_node(TrackerServer(
+            config=TrackerConfig(ping_interval_s=2.0)))
+        self.server = self.rt.nodes["server"]
+        # recovery timescales sized to the fault model: leases must expire
+        # well before a lost RESULT costs a makespan-visible stall, piece
+        # re-requests faster still, and gossip/re-registration in between
+        self._cfg = dict(work_timeout_s=10.0, status_interval_s=1.0,
+                         rechoke_interval_s=5.0, piece_timeout_s=5.0,
+                         reregister_s=15.0, gossip_interval_s=5.0,
+                         replicate_completed=True, root_dir=root_dir)
+        self.incarnations: Dict[str, List[Agent]] = {}
+        self.host = self._make_agent("host")
+        self.rt.add_node(self.host)
+        self.image = _chaos_image(image_bytes) if real_image else None
+        self.app = make_prime_app(
+            self.APP_ID, "host", 3, 1000 * n_parts, n_parts=n_parts,
+            sim_time_per_number=sim_time_per_number, m_min=m_min,
+            swarm=True, app_bytes=image_bytes,
+            piece_bytes=max(image_bytes // n_pieces, 1), image=self.image)
+        self.host.host_app(self.app)
+        for i, nid in enumerate(self.vol_ids):
+            self.rt.add_node(self._make_agent(nid),
+                             speed=1.0 - 0.3 * i / max(n_volunteers, 1))
+            # crash-restarts build a fresh incarnation: volatile state is
+            # lost, only the on-disk piece cache (root_dir) survives
+            self.rt.restart_factory[nid] = \
+                lambda n=nid: self._make_agent(n)
+        self.makespan_s: Optional[float] = None
+
+    def _make_agent(self, node_id: str) -> Agent:
+        a = Agent(node_id, config=AgentConfig(**self._cfg))
+        self.incarnations.setdefault(node_id, []).append(a)
+        return a
+
+    # ------------------------------------------------------------------ #
+    def volunteers(self) -> List[Agent]:
+        """Currently-live volunteer incarnations."""
+        return [self.rt.nodes[nid] for nid in self.vol_ids
+                if nid in self.rt.nodes]
+
+    def _converged(self) -> bool:
+        if not self.app.done:
+            return False
+        for nid in self.vol_ids:
+            if nid in self._perma_dead:
+                continue
+            node = self.rt.nodes.get(nid)       # None while crashed
+            if node is None or self.APP_ID not in node.images:
+                return False
+        return True
+
+    def run(self) -> "ChaosScenario":
+        self.rt.run(until=self.until_s, stop_when=self._converged)
+        self.makespan_s = self.rt.now()
+        return self
+
+    # ------------------------------------------------------------------ #
+    def _fail(self, what: str) -> str:
+        return (f"[chaos seed={self.seed}] {what} — repro: "
+                f"PYTHONPATH=src python -m repro.core.chaos "
+                f"--seed {self.seed} --check")
+
+    def check_invariants(self) -> None:
+        """Assert the convergence/quorum/availability invariants; failure
+        messages carry the seed for a one-line repro."""
+        assert self.app.done, self._fail("application never completed")
+        survivors = self.volunteers()
+        manifest_hash = self.app.manifest.manifest_hash
+        for a in survivors:
+            assert self.APP_ID in a.images, \
+                self._fail(f"{a.node_id} never replicated the image")
+            assert a.images[self.APP_ID] == manifest_hash, \
+                self._fail(f"{a.node_id} holds a different image")
+            if self.image is not None:
+                got = a.px.assembled_image(self.APP_ID)
+                assert got == self.image, \
+                    self._fail(f"{a.node_id} image not byte-identical")
+        # no part was ever decided by more than m_min + 1 voters, at any
+        # seeder incarnation that existed during the run
+        for incs in self.incarnations.values():
+            for a in incs:
+                for (app_id, part_id), q in a.quorum_sizes.items():
+                    assert q <= self.m_min + 1, self._fail(
+                        f"{a.node_id} part {part_id} quorum {q} "
+                        f"> m_min+1={self.m_min + 1}")
+        # incremental availability equals the naive recompute after the
+        # fault trace (the PR 3 fast path must not drift under chaos)
+        for a in survivors + [self.host]:
+            for app_id in list(a.px._counts):
+                arr = a.px.avail_array(app_id)
+                naive = a.px._avail_naive(app_id)
+                for p in range(len(arr)):
+                    assert int(arr[p]) == naive[p], self._fail(
+                        f"{a.node_id} availability drift at piece {p}: "
+                        f"incremental {int(arr[p])} != naive {naive[p]}")
+
+    def report(self) -> dict:
+        rt = self.rt
+        return {
+            "seed": self.seed,
+            "done": self.app.done,
+            "replicated": self._converged(),
+            "makespan_s": self.makespan_s if self.makespan_s is not None
+            else rt.now(),
+            "replicas": sum(1 for a in self.volunteers()
+                            if self.APP_ID in a.images),
+            "origin_up_mb": rt.tx_bytes.get("host", 0) / 1e6,
+            "dropped_msgs": rt.dropped_msgs,
+            "dup_msgs": rt.dup_msgs,
+            "crashes": rt.crash_count,
+            "restarts": rt.restart_count,
+            "events": rt.events_processed,
+        }
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--volunteers", type=int, default=12)
+    ap.add_argument("--loss", type=float, default=0.10)
+    ap.add_argument("--jitter", type=float, default=0.2)
+    ap.add_argument("--churn", type=float, default=0.25)
+    ap.add_argument("--partitions", type=int, default=1)
+    ap.add_argument("--check", action="store_true",
+                    help="assert the chaos invariants after the run")
+    args = ap.parse_args(argv)
+    sc = ChaosScenario(seed=args.seed, n_volunteers=args.volunteers,
+                       loss=args.loss, jitter_s=args.jitter,
+                       churn=args.churn, n_partitions=args.partitions)
+    sc.run()
+    print(sc.report())
+    if args.check:
+        sc.check_invariants()
+        print(f"[chaos] seed={args.seed}: invariants OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -179,6 +179,11 @@ class PieceExchange:
         self.pending: Dict[str, Dict[int, Dict[str, float]]] = \
             collections.defaultdict(dict)
         self.peer_load: Dict[str, int] = collections.defaultdict(int)
+        # app -> piece -> holders whose request for it went stale
+        # (recover()): the re-request prefers an *alternate* holder, so a
+        # black-holed link cannot capture a piece's retries forever.
+        # Cleared per piece the moment a copy verifies.
+        self.stalled_holders: Dict[str, Dict[int, Set[str]]] = {}
         # --- incremental availability (tentpole) -------------------------- #
         # per-app int32 array: how many *partial* holders have each piece
         # (full seeders add a uniform constant tracked by len(full_seeders))
@@ -278,6 +283,7 @@ class PieceExchange:
                 self.peer_load[peer] = max(0, self.peer_load[peer] - 1)
         self.fetching.discard(app_id)
         self.inventories.pop(app_id, None)
+        self.stalled_holders.pop(app_id, None)
         self.peer_masks.pop(app_id, None)
         self._counts.pop(app_id, None)
         self._piece_holders.pop(app_id, None)
@@ -542,6 +548,7 @@ class PieceExchange:
                 order = rarest_first_order_np(missing, counts, offset=off,
                                               n_pieces=n_pieces)
                 usable_full = usable & self.full_seeders.get(app_id, set())
+                stalled = self.stalled_holders.get(app_id, {})
                 now = self.now()
                 for piece_id in order:
                     if (len(pending) >= self.cfg.piece_pipeline
@@ -550,8 +557,9 @@ class PieceExchange:
                     cands = usable_full | (usable & holders[piece_id])
                     if not cands:
                         continue
+                    shun = stalled.get(piece_id, ())
                     peer = min(cands, key=lambda h: (
-                        self.peer_load.get(h, 0), h))
+                        h in shun, self.peer_load.get(h, 0), h))
                     pending[piece_id] = {peer: now}
                     usable.discard(peer)
                     usable_full.discard(peer)
@@ -608,15 +616,23 @@ class PieceExchange:
     def _endgame(self, app_id: str) -> None:
         """Every missing piece is in flight: duplicate each outstanding
         request to other holders (choked ones queue it) so one slow uplink
-        cannot stall completion; PIECE_CANCEL reconciles the losers."""
+        cannot stall completion; PIECE_CANCEL reconciles the losers.
+
+        Holders whose earlier request for the piece went stale
+        (`stalled_holders`) are skipped: with a deterministic holder order
+        and a duplication cap, re-asking the same silent trio forever
+        would pin the piece to peers that never deliver while willing
+        seeders idle one name further down the list."""
         pending = self.pending[app_id]
+        stalled = self.stalled_holders.get(app_id, {})
         now = self.now()
         cap = max(int(getattr(self.cfg, "endgame_dup", 3)), 1)
         for piece_id, asked in pending.items():
             if len(asked) >= cap:
                 continue
+            shun = stalled.get(piece_id, ())
             for holder in self._holders(app_id, piece_id):
-                if holder in asked:
+                if holder in asked or holder in shun:
                     continue
                 asked[holder] = now
                 self.peer_load[holder] += 1
@@ -664,6 +680,51 @@ class PieceExchange:
             self._promote_full_seeder(app_id, peer)
         return True
 
+    def _sync_peer_mask(self, app_id: str, peer: str, mask: int) -> bool:
+        """Authoritative holdings snapshot, straight from the peer itself
+        (a direct HAVE, not a relay): unlike the grow-only merge, bits the
+        peer no longer announces are REMOVED.  A crash-restarted peer
+        loses its pieces but keeps its node id — without reconciling
+        downward, its stale full mask makes every leecher spin a
+        request/refusal loop against a peer that holds nothing."""
+        if mask is None or peer == self.node_id:
+            return False
+        manifest = self.manifests.get(app_id)
+        masks = self.peer_masks[app_id]
+        old = masks.get(peer)
+        if manifest is None or old is None:
+            # no manifest to validate against, or first contact: the
+            # grow-only merge already does the right thing
+            return self._note_peer_mask(app_id, peer, mask)
+        new = mask & manifest.full_mask
+        if new == old:
+            return False
+        masks[peer] = new
+        counts = self._counts.get(app_id)
+        if counts is not None:
+            holders = self._piece_holders[app_id]
+            for p in iter_bits(old & ~new):
+                counts[p] -= 1
+                holders[p].discard(peer)
+            for p in iter_bits(new & ~old):
+                counts[p] += 1
+                holders[p].add(peer)
+        if (old == 0) != (new == 0):
+            # the cached holder pool only tracks *membership*: invalidate
+            # when the peer enters or leaves it, not on every mask delta
+            # (the grow-only merge has the same rule — a per-announce
+            # invalidation would put an O(N) pool rebuild back on the
+            # HAVE hot path the PR 3 caching removed)
+            self._pool_changed(app_id)
+        if new == manifest.full_mask:
+            self._promote_full_seeder(app_id, peer)
+        elif peer in self.full_seeders.get(app_id, ()):
+            # demote: the peer itself says it no longer holds everything.
+            # Pool membership is unchanged — it still holds pieces (a
+            # shrink to nothing took the new == 0 branch above).
+            self.full_seeders[app_id].discard(peer)
+        return True
+
     def _promote_full_seeder(self, app_id: str, peer: str) -> None:
         """The peer completed the image: it is a seeder now, not a
         leecher — release any upload slot it held."""
@@ -690,7 +751,15 @@ class PieceExchange:
         if peer == self.node_id:
             return
         self.swarm_peers[app_id].add(peer)
-        changed = self._note_peer_mask(app_id, peer, payload.get("mask", 0))
+        if "peer" in payload:
+            # relayed (extra hop, possibly stale): grow-only merge
+            changed = self._note_peer_mask(app_id, peer,
+                                           payload.get("mask", 0))
+        else:
+            # direct from the peer: authoritative snapshot — may shrink
+            # (crash-restarted peers re-announce what they really hold)
+            changed = self._sync_peer_mask(app_id, peer,
+                                           payload.get("mask", 0))
         # requests outstanding at a peer that turns out to lack the piece
         # are re-routed right away
         pending = self.pending.get(app_id)
@@ -717,6 +786,12 @@ class PieceExchange:
         self.interested[app_id].add(peer)
         if not self.cfg.choke:
             # choking disabled: everyone is always welcome
+            self.send(peer, Msg(UNCHOKE, self.node_id,
+                                {"app_id": app_id}, size_bytes=64))
+            return
+        if peer in self.unchoked[app_id]:
+            # the peer re-expressed interest while already holding a slot:
+            # our earlier UNCHOKE was lost — repeat the grant (idempotent)
             self.send(peer, Msg(UNCHOKE, self.node_id,
                                 {"app_id": app_id}, size_bytes=64))
             return
@@ -951,6 +1026,9 @@ class PieceExchange:
     def _reconcile(self, app_id: str, piece_id: int) -> None:
         """Drop the pending entry for a piece we now hold and PIECE_CANCEL
         every other holder still racing to serve it."""
+        stalled = self.stalled_holders.get(app_id)
+        if stalled:
+            stalled.pop(piece_id, None)      # decided: forget stale history
         asked = self.pending[app_id].pop(piece_id, None)
         if not asked:
             return
@@ -999,6 +1077,10 @@ class PieceExchange:
                 if now - t > stall_s:
                     del asked[peer]
                     self.peer_load[peer] = max(0, self.peer_load[peer] - 1)
+                    # shun the silent holder for this piece so the
+                    # re-request pump issues goes to an alternate one
+                    self.stalled_holders.setdefault(app_id, {}) \
+                        .setdefault(piece_id, set()).add(peer)
                     # the holder may have the request parked in its choke
                     # queue (endgame): withdraw it, or it inflates the
                     # load the holder reports to the tracker forever
@@ -1012,4 +1094,8 @@ class PieceExchange:
         if app_id in self.fetching and not self.unchoked_by[app_id]:
             self.interest_sent[app_id].clear()
             self._interest_clean.discard(app_id)
+            # re-announce to the tracker: with no holder granting us a
+            # slot, our join HAVE (or the tracker's relays) may have been
+            # lost — without the announce the swarm never discovers us
+            self.send(self.tracker_id, self._have_msg(app_id))
         self.pump(app_id)

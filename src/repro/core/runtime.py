@@ -19,11 +19,13 @@ from __future__ import annotations
 import heapq
 import itertools
 import queue
+import random
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
+from repro.core.faults import FaultPlan
 from repro.core.messages import Msg
 
 
@@ -105,9 +107,17 @@ CANCELLED = object()
 
 # --------------------------------------------------------------------------- #
 class SimRuntime(Runtime):
-    """Deterministic discrete-event simulator."""
+    """Deterministic discrete-event simulator.
 
-    def __init__(self, link: Optional[LinkModel] = None):
+    An optional `FaultPlan` (core.faults) injects seeded, reproducible
+    chaos: per-link loss/duplication/jitter, timed partitions and node
+    crash/restart schedules.  All fault randomness comes from one
+    `random.Random(plan.seed)` and is only drawn when the effective fault
+    is non-trivial, so a zero-fault plan leaves the event trace untouched.
+    """
+
+    def __init__(self, link: Optional[LinkModel] = None,
+                 faults: Optional[FaultPlan] = None):
         self.nodes: Dict[str, Node] = {}
         self.link = link or LinkModel()
         self._t = 0.0
@@ -133,6 +143,26 @@ class SimRuntime(Runtime):
         self._ps_jobs: Dict[str, Dict[int, list]] = {}
         self._ps_last: Dict[str, float] = {}
         self._ps_event: Dict[str, int] = {}
+        # --- fault injection (core.faults) ----------------------------- #
+        self.faults = faults
+        self._rng = random.Random(faults.seed) if faults is not None else None
+        # private copy: drop_next counters are consumed as messages match
+        self._drop_next: Dict[Tuple[str, str, str], int] = \
+            dict(faults.drop_next) if faults is not None else {}
+        self.crashed: Set[str] = set()
+        # node_id -> factory building a fresh incarnation on restart; when
+        # absent the old object is resumed with its memory intact
+        self.restart_factory: Dict[str, Callable[[], Node]] = {}
+        self._crashed_nodes: Dict[str, Tuple[Node, float]] = {}
+        self.dropped_msgs = 0
+        self.dup_msgs = 0
+        self.crash_count = 0
+        self.restart_count = 0
+        if faults is not None:
+            for c in faults.crashes:
+                self._at(c.at_s, self.crash, (c.node,))
+                if c.restart_s is not None:
+                    self._at(c.restart_s, self.restart, (c.node,))
 
     def add_node(self, node: Node, speed: float = 1.0) -> None:
         self.nodes[node.node_id] = node
@@ -168,12 +198,77 @@ class SimRuntime(Runtime):
             at = t + self.link.base_latency_s
         else:
             at = self._t + self.link.latency(msg.size_bytes)
+        if self.faults is not None:
+            # loss/dup/jitter apply past the pipe model: the bytes were
+            # transmitted (and accounted), the network lost them.  RNG is
+            # drawn only for non-trivial faults so a zero-fault plan
+            # leaves the trace untouched.
+            key = (src, dst, msg.kind)
+            n = self._drop_next.get(key, 0)
+            if n > 0:
+                self._drop_next[key] = n - 1
+                self.dropped_msgs += 1
+                return
+            fault = self.faults.link_fault(src, dst)
+            if fault:
+                if fault.drop_p and self._rng.random() < fault.drop_p:
+                    self.dropped_msgs += 1
+                    return
+                if fault.jitter_s:
+                    at += self._rng.random() * fault.jitter_s
+                if fault.dup_p and self._rng.random() < fault.dup_p:
+                    # duplicate delivery, independently jittered (payloads
+                    # are treated read-only by receivers, so sharing the
+                    # Msg is safe — same convention as tracker relays)
+                    self.dup_msgs += 1
+                    extra = (self._rng.random() * fault.jitter_s
+                             if fault.jitter_s else self.link.base_latency_s)
+                    self._at(at + extra, self._deliver, (dst, msg))
         self._at(at, self._deliver, (dst, msg))
 
     def _deliver(self, dst: str, msg: Msg) -> None:
+        if self.faults is not None \
+                and self.faults.cut(msg.src, dst, self._t):
+            # partitions cut at delivery time, so in-flight messages
+            # crossing the cut are lost too
+            self.dropped_msgs += 1
+            return
         node = self.nodes.get(dst)
         if node is not None:
             node.on_message(msg)
+
+    # ---- crash / restart (fault injection) ---------------------------- #
+    def crash(self, node_id: str) -> None:
+        """Kill a node: it stops receiving messages, all its timers and
+        in-flight work die.  In-flight messages it already sent still
+        deliver (they are in the network, not the process)."""
+        node = self.nodes.pop(node_id, None)
+        if node is None:
+            return
+        self.crashed.add(node_id)
+        self._crashed_nodes[node_id] = (node, self.speed.get(node_id, 1.0))
+        self.crash_count += 1
+        for key in [k for k in self._timer_ver if k[0] == node_id]:
+            self._timer_ver[key] += 1        # every armed timer dies
+        self._ps_jobs.pop(node_id, None)
+        self._ps_last.pop(node_id, None)
+        self._ps_event.pop(node_id, None)    # scheduled _ps_fire is stale
+
+    def restart(self, node_id: str) -> None:
+        """Bring a crashed node back.  A registered `restart_factory`
+        builds a fresh incarnation (volatile state lost, only disk
+        survives — the realistic crash model); without one the old object
+        resumes with its memory intact (suspend/resume).  Either way the
+        node's start() runs again, so agents re-register with the
+        tracker."""
+        if node_id not in self.crashed:
+            return
+        self.crashed.discard(node_id)
+        old, speed = self._crashed_nodes.pop(node_id)
+        factory = self.restart_factory.get(node_id)
+        node = factory() if factory is not None else old
+        self.restart_count += 1
+        self.add_node(node, speed=speed)
 
     def set_timer(self, node_id: str, name: str, delay_s: float,
                   periodic: bool = False) -> None:

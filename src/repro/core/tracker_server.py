@@ -59,6 +59,9 @@ class TrackerServer(Node):
         self._init_cache: List[AppInfo] = []
         self._init_cache_at: float = -1e9
         self.log: List[tuple] = []
+        # per-member boot nonce from REGISTER: a changed nonce means a
+        # fresh process incarnation whose stale seeder claims must drop
+        self.boot: Dict[str, float] = {}
         # per-app seeder load (active lease counts) from STATUS reports
         self.seeder_load: Dict[str, Dict[str, int]] = {}
         # per-app swarm membership (volunteers announcing via HAVE)
@@ -107,6 +110,17 @@ class TrackerServer(Node):
         elif msg.kind == REGISTER:
             self.members.add(msg.src)
             self.missed[msg.src] = 0
+            boot = msg.payload.get("boot")
+            if boot is not None:
+                prev = self.boot.get(msg.src)
+                self.boot[msg.src] = boot
+                if prev is not None and boot != prev:
+                    # a NEW incarnation of a known node id: it crashed and
+                    # restarted inside the liveness window, so its old
+                    # seeder entries are claims about an image it no
+                    # longer holds — drop them; a live replica re-earns
+                    # its place via SEEDER_UPDATE once it re-verifies
+                    self._drop_stale_seeder(msg.src)
             self.VAL(msg.src, msg, alive=True)
             self.INIT(msg.src)
         elif msg.kind == STATUS:
@@ -185,6 +199,13 @@ class TrackerServer(Node):
         row = self.app_list.get(app_id)
         if row is None or seeder in self.blocklist:
             return
+        if seeder not in self.members:
+            # a SEEDER_UPDATE from a node we already declared dead (e.g.
+            # one that completed the image just before crashing, its
+            # announce surviving in flight) must not enter the seeder set:
+            # promoting a corpse to host would strand the app.  A live
+            # sender re-announces after its next APP_LIST.
+            return
         if seeder not in row.seeders:
             row.seeders = tuple(row.seeders) + (seeder,)
             row.updated_at = self.rt.now()
@@ -201,6 +222,65 @@ class TrackerServer(Node):
             if self.rt.now() - self._last_push >= self.cfg.push_interval_s:
                 self.PUSH()
 
+    def _drop_stale_seeder(self, member: str) -> None:
+        """Remove `member` from every seeder set it does not host: its
+        fresh incarnation lost the images backing those entries.  Rows it
+        hosts are re-upserted by the REGISTER being processed."""
+        for row in self.app_list.values():
+            if member in row.seeders and row.host_id != member:
+                row.seeders = tuple(s for s in row.seeders if s != member)
+                self._relay_cache.pop(row.app_id, None)
+        for swarm in self.swarms.values():
+            swarm.discard(member)
+
+    def _fail_hosts(self):
+        """Re-elect a host for every row whose host is not a live member:
+        promote the least-loaded live replica seeder, or mark the row for
+        dropping when none is left.  Returns (dropped, promoted) rows —
+        the caller sends the notifications (DROP_APP / PUSH) so message
+        order stays under its control."""
+        dropped, promoted = [], []
+        for row in list(self.app_list.values()):
+            if row.host_id in self.members:
+                continue
+            live = [s for s in row.seeders if s in self.members]
+            if live:
+                # replica failover: promote the least-loaded live
+                # seeder instead of killing the application
+                load = self.seeder_load.get(row.app_id, {})
+                row.host_id = min(live,
+                                  key=lambda s: (load.get(s, 0), s))
+                row.updated_at = self.rt.now()
+                promoted.append(row)
+            else:
+                dropped.append(row)
+        for row in dropped:
+            del self.app_list[row.app_id]
+        return dropped, promoted
+
+    def _reverify_rows(self) -> None:
+        """Periodic re-verification (chaos hardening): prune seeders that
+        are no longer live members from every row, and re-elect hosts for
+        rows whose host died silently.  In a fault-free run this is a
+        cheap no-op scan — the drop_host path keeps rows consistent — but
+        under partitions/loss a row can go stale (e.g. a seeder announce
+        that raced its sender's death), and a stale host would strand the
+        app's leechers forever."""
+        for row in self.app_list.values():
+            live = tuple(s for s in row.seeders if s in self.members)
+            if live != row.seeders:
+                row.seeders = live
+                self._relay_cache.pop(row.app_id, None)
+        dropped, promoted = self._fail_hosts()
+        if dropped:
+            note = Msg(DROP_APP, self.node_id,
+                       {"app_ids": [r.app_id for r in dropped]},
+                       size_bytes=128)
+            for m in self.members:
+                self.rt.send(m, note)
+        if promoted:
+            self.PUSH()
+
     def INFO(self, change: str, data) -> None:
         """Forward availability/update changes to the synchronizer."""
         if change == "upsert":
@@ -209,31 +289,17 @@ class TrackerServer(Node):
             member = data
             self.members.discard(member)
             self.missed.pop(member, None)
+            self.boot.pop(member, None)
             self._relay_cache.clear()   # membership + seeder sets change
             for loads in self.seeder_load.values():
                 loads.pop(member, None)
             for swarm in self.swarms.values():
                 swarm.discard(member)
-            dropped, promoted = [], []
-            for row in list(self.app_list.values()):
+            for row in self.app_list.values():
                 if member in row.seeders:
                     row.seeders = tuple(s for s in row.seeders
                                         if s != member)
-                if row.host_id != member:
-                    continue
-                live = [s for s in row.seeders if s in self.members]
-                if live:
-                    # replica failover: promote the least-loaded live
-                    # seeder instead of killing the application
-                    load = self.seeder_load.get(row.app_id, {})
-                    row.host_id = min(live,
-                                      key=lambda s: (load.get(s, 0), s))
-                    row.updated_at = self.rt.now()
-                    promoted.append(row)
-                else:
-                    dropped.append(row)
-            for row in dropped:
-                del self.app_list[row.app_id]
+            dropped, promoted = self._fail_hosts()
             if dropped:
                 note = Msg(DROP_APP, self.node_id,
                            {"app_ids": [r.app_id for r in dropped]},
@@ -279,4 +345,5 @@ class TrackerServer(Node):
     def on_timer(self, name: str) -> None:
         if name == "ping":
             self.PING()
+            self._reverify_rows()
             self.PUSH()

@@ -204,6 +204,10 @@ class Part:
     done: bool = False
     results: List[Tuple[str, Any, float]] = field(default_factory=list)
     # (volunteer_id, result, time_s) — for m_min-way majority voting
+    # the majority_vote winner the part was validated with (set when
+    # `done` flips); gossip must ship THIS, not a raw vote — results[0]
+    # may be the minority/corrupt one
+    winner: Any = None
 
 
 @dataclass

@@ -1,0 +1,299 @@
+"""Fault injection: FaultPlan determinism, loss/churn recovery, and the
+seeded chaos invariant suite (convergence, quorum caps, availability).
+
+Any failing chaos assertion prints its seed; reproduce with
+  PYTHONPATH=src python -m repro.core.chaos --seed N --check
+"""
+import pytest
+
+pytestmark = pytest.mark.protocol
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import (Agent, AgentConfig, ChaosScenario, Crash, FaultPlan,
+                        LinkModel, LinkFault, Msg, Partition, SimRuntime,
+                        TrackerConfig, TrackerServer, make_prime_app)
+from repro.core.messages import PIECE_DATA
+from repro.core.runtime import Node
+
+
+# ---------------------- fault-layer unit semantics ---------------------- #
+class _Sink(Node):
+    def __init__(self, node_id="sink"):
+        self.node_id = node_id
+        self.got = []
+
+    def on_message(self, msg):
+        self.got.append((msg.payload.get("i"), round(self.rt.now(), 6)))
+
+
+def test_drop_all_loses_messages_and_counts_them():
+    plan = FaultPlan(seed=1, links={("src", "sink"): LinkFault(drop_p=1.0)})
+    rt = SimRuntime(faults=plan)
+    sink = _Sink()
+    rt.add_node(sink)
+    for i in range(5):
+        rt.send("sink", Msg("X", "src", {"i": i}, size_bytes=64))
+    rt.send("sink", Msg("X", "other", {"i": 99}, size_bytes=64))
+    rt.run()
+    assert [i for i, _ in sink.got] == [99]    # only the clean link works
+    assert rt.dropped_msgs == 5
+
+
+def test_duplication_delivers_twice():
+    plan = FaultPlan(seed=1, link=LinkFault(dup_p=1.0))
+    rt = SimRuntime(faults=plan)
+    sink = _Sink()
+    rt.add_node(sink)
+    rt.send("sink", Msg("X", "src", {"i": 0}, size_bytes=64))
+    rt.run()
+    assert [i for i, _ in sink.got] == [0, 0]
+    assert rt.dup_msgs == 1
+
+
+def test_partition_cuts_inflight_messages_and_heals():
+    plan = FaultPlan(partitions=[Partition(1.0, 2.0, (frozenset({"a"}),))])
+    rt = SimRuntime(faults=plan)
+    sink = _Sink("a")
+    rt.add_node(sink)
+    rt.send("a", Msg("X", "b", {"i": 0}, size_bytes=64))   # before: delivers
+    rt.run(until=0.999)
+    # sent before the cut but arriving inside it: lost in flight
+    rt._at(0.9999, rt.send, ("a", Msg("X", "b", {"i": 1}, size_bytes=64)))
+    # sent and delivered inside the partition: lost
+    rt._at(1.5, rt.send, ("a", Msg("X", "b", {"i": 2}, size_bytes=64)))
+    # after the heal: delivers again
+    rt._at(2.5, rt.send, ("a", Msg("X", "b", {"i": 3}, size_bytes=64)))
+    rt.run()
+    assert [i for i, _ in sink.got] == [0, 3]
+    assert rt.dropped_msgs == 2
+
+
+def test_partition_same_island_and_rest_island_communicate():
+    part = Partition(0.0, 10.0, ({"a", "b"}, {"c"}))
+    assert not part.cuts("a", "b", 5.0)      # same island
+    assert part.cuts("a", "c", 5.0)          # different islands
+    assert part.cuts("a", "z", 5.0)          # island vs rest
+    assert not part.cuts("y", "z", 5.0)      # rest vs rest
+    assert not part.cuts("a", "c", 10.0)     # after the heal
+
+
+def test_crash_kills_timers_work_and_delivery_until_restart():
+    fired = []
+
+    class Ticker(Node):
+        node_id = "t"
+
+        def start(self, rt):
+            super().start(rt)
+            rt.set_timer("t", "tick", 1.0, periodic=True)
+
+        def on_timer(self, name):
+            fired.append(self.rt.now())
+
+        def on_message(self, msg):
+            fired.append(("msg", self.rt.now()))
+
+        def on_work_done(self, tag, result, elapsed_s):
+            fired.append(("work", self.rt.now()))
+
+    plan = FaultPlan(crashes=[Crash("t", at_s=2.5, restart_s=5.2)])
+    rt = SimRuntime(faults=plan)
+    rt.add_node(Ticker())
+    rt.submit_work("t", "job", None, sim_duration_s=4.0)   # dies with crash
+    rt._at(3.0, rt.send, ("t", Msg("X", "x", size_bytes=64)))
+    rt.run(until=8.0)
+    assert rt.crash_count == 1 and rt.restart_count == 1
+    # ticks at 1, 2 — then the crash eats the timer, the in-flight work
+    # and the message; restart re-arms from start(): ticks at 6.2, 7.2
+    assert [f for f in fired if isinstance(f, tuple)] == []
+    assert [round(t, 1) for t in fired] == [1.0, 2.0, 6.2, 7.2]
+
+
+# ------------- differential: zero-fault plan is provably free ----------- #
+class _TracingRuntime(SimRuntime):
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.trace = []
+
+    def _deliver(self, dst, msg):
+        self.trace.append((round(self._t, 9), dst, msg.kind, msg.src))
+        super()._deliver(dst, msg)
+
+
+def _run_swarm(faults):
+    rt = _TracingRuntime(link=LinkModel(uplink_Bps=12.5e6,
+                                        downlink_Bps=12.5e6), faults=faults)
+    rt.add_node(TrackerServer(config=TrackerConfig(ping_interval_s=2.0)))
+    host = Agent("host", config=AgentConfig(work_timeout_s=60.0))
+    rt.add_node(host)
+    image = int(4e6)
+    app = make_prime_app("app", "host", 3, 24_000, n_parts=16,
+                         sim_time_per_number=1e-3, m_min=2, swarm=True,
+                         app_bytes=image, piece_bytes=image // 8)
+    host.host_app(app)
+    leechers = []
+    for i in range(5):
+        a = Agent(f"L{i}", config=AgentConfig(work_timeout_s=60.0))
+        rt.add_node(a, speed=1.0 - 0.1 * i)
+        leechers.append(a)
+    rt.run(until=3600, stop_when=lambda: app.done)
+    assert app.done
+    rt.run(until=rt.now() + 30.0)        # drain post-completion traffic
+    return rt, app, leechers
+
+
+def test_zero_fault_plan_is_event_for_event_identical():
+    """The fault layer must be provably free when disabled: a zero-fault
+    FaultPlan yields the same trace as no plan at all."""
+    bare, app_a, leech_a = _run_swarm(faults=None)
+    zero, app_b, leech_b = _run_swarm(faults=FaultPlan(seed=123))
+    assert zero.dropped_msgs == 0 and zero.dup_msgs == 0
+    assert bare.events_processed == zero.events_processed
+    assert bare.now() == zero.now()
+    assert bare.trace == zero.trace      # event-for-event identical
+    assert bare.tx_bytes == zero.tx_bytes
+    for a, b in zip(leech_a, leech_b):
+        assert a.px.bitfield_mask("app") == b.px.bitfield_mask("app")
+        assert a.inventories["app"].have == b.inventories["app"].have
+        assert a.completed_cycles == b.completed_cycles
+
+
+# ----------- dropped PIECE_DATA: staleness sweep re-requests ------------ #
+def test_dropped_piece_data_rerequested_and_completes():
+    """Regression for the pending-request staleness sweep: a PIECE_DATA
+    lost on the wire must be re-requested (here from a swarm with an
+    alternate holder) instead of stalling the fetch forever."""
+    plan = FaultPlan(drop_next={("host", "L1", PIECE_DATA): 2})
+    rt = SimRuntime(link=LinkModel(uplink_Bps=12.5e6), faults=plan)
+    rt.add_node(TrackerServer(config=TrackerConfig(ping_interval_s=2.0)))
+    cfg = dict(work_timeout_s=60.0, status_interval_s=0.5,
+               piece_timeout_s=3.0)
+    host = Agent("host", config=AgentConfig(**cfg))
+    rt.add_node(host)
+    image = int(2e6)
+    app = make_prime_app("app", "host", 3, 12_000, n_parts=8,
+                         sim_time_per_number=1e-3, swarm=True,
+                         app_bytes=image, piece_bytes=image // 8)
+    host.host_app(app)
+    l0 = Agent("L0", config=AgentConfig(**cfg))
+    rt.add_node(l0)
+    # phase 1: L0 replicates cleanly (its links are not in drop_next)
+    rt.run(until=600, stop_when=lambda: "app" in l0.images)
+    assert "app" in l0.images
+    # phase 2: L1 joins; its first two PIECE_DATA from the origin die on
+    # the wire — the sweep re-requests and the image still completes
+    l1 = Agent("L1", config=AgentConfig(**cfg))
+    rt.add_node(l1)
+    rt.run(until=rt.now() + 600, stop_when=lambda: "app" in l1.images)
+    assert rt.dropped_msgs == 2
+    assert "app" in l1.images
+    assert l1.inventories["app"].complete
+    # at least one piece was fetched from the replica, not the origin
+    assert sum(l1.px.pieces_from["app"].values()) == 8
+
+
+# ------------- crash-restart: disk piece cache survives ----------------- #
+def test_crash_restart_rescans_piece_cache(tmp_path):
+    incarnations = []
+
+    def mk_agent():
+        a = Agent("V0", config=AgentConfig(
+            work_timeout_s=20.0, status_interval_s=0.5, piece_timeout_s=3.0,
+            replicate_completed=True, root_dir=str(tmp_path)))
+        incarnations.append(a)
+        return a
+
+    rt = SimRuntime(link=LinkModel(uplink_Bps=2.5e6, downlink_Bps=2.5e6))
+    rt.add_node(TrackerServer(config=TrackerConfig(ping_interval_s=1.0)))
+    host = Agent("host", config=AgentConfig(work_timeout_s=20.0))
+    rt.add_node(host)
+    image = bytes((i * 37 + 5) % 256 for i in range(320_000))
+    app = make_prime_app("app", "host", 3, 8_000, n_parts=8,
+                         sim_time_per_number=1e-3, swarm=True,
+                         piece_bytes=len(image) // 16, image=image)
+    host.host_app(app)
+    rt.add_node(mk_agent())
+    rt.restart_factory["V0"] = mk_agent
+    # run until V0 holds a few pieces (but not all), then crash it
+    rt.run(until=600, stop_when=lambda: len(
+        incarnations[0].px.inventories.get("app").have) >= 4
+        if incarnations[0].px.inventories.get("app") else False)
+    cached = len(incarnations[0].px.inventories["app"].have)
+    assert 4 <= cached < 16
+    rt.crash("V0")
+    rt.run(until=rt.now() + 5.0)
+    rt.restart("V0")
+    rt.run(until=rt.now() + 600,
+           stop_when=lambda: "app" in incarnations[-1].images)
+    v0 = incarnations[-1]
+    assert v0 is not incarnations[0]     # a fresh incarnation took over
+    assert "app" in v0.images
+    # the on-disk cache was rescanned: only the missing pieces re-fetched
+    refetched = sum(v0.px.pieces_from["app"].values())
+    assert refetched <= 16 - cached
+    assert v0.px.assembled_image("app") == image
+
+
+# --------------- tracker: silent-death row re-verification -------------- #
+def test_tracker_reverifies_rows_and_reelects_host():
+    sent = []
+
+    class _RT:
+        def now(self):
+            return 0.0
+
+        def send(self, dst, msg):
+            sent.append((dst, msg))
+
+    server = TrackerServer()
+    server.rt = _RT()
+    from repro.core.messages import AppInfo
+    server.members = {"s2", "s3", "v"}
+    server.app_list["a"] = AppInfo("a", "dead-host",
+                                   seeders=("dead-host", "s1", "s2", "s3"))
+    server.app_list["b"] = AppInfo("b", "gone", seeders=("gone",))
+    server.seeder_load["a"] = {"s2": 4, "s3": 1}
+    server._reverify_rows()
+    row = server.app_list["a"]
+    # dead seeders pruned, least-loaded live replica promoted to host
+    assert row.host_id == "s3"
+    assert set(row.seeders) == {"s2", "s3"}
+    # a row with no live seeder left is dropped and announced
+    assert "b" not in server.app_list
+    assert any(msg.kind == "DROP_APP" and msg.payload["app_ids"] == ["b"]
+               for _, msg in sent)
+
+
+# ------------------- seeded chaos invariant suite ----------------------- #
+# Scenario: N=12 volunteers, 10% loss, 2% duplication, 200ms jitter, 25%
+# churn (crash + restart as fresh incarnations), one timed partition.
+@pytest.mark.parametrize("seed", range(20))
+def test_chaos_invariants(seed):
+    sc = ChaosScenario(seed=seed).run()
+    sc.check_invariants()
+    r = sc.report()
+    assert r["replicated"], f"seed={seed}: {r}"
+    assert r["dropped_msgs"] > 0          # the plan actually bit
+    assert r["restarts"] == r["crashes"] > 0
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 10_000),
+           loss=st.floats(0.0, 0.30),
+           churn=st.floats(0.0, 0.5),
+           n_partitions=st.integers(0, 2))
+    def test_chaos_property_random_plans(seed, loss, churn, n_partitions):
+        """Random small FaultPlans (loss <= 30%, <= 2 partitions, <= N/2
+        crashes) preserve the convergence + quorum + availability
+        invariants; the failing seed prints as a one-line repro."""
+        sc = ChaosScenario(seed=seed, n_volunteers=8, n_pieces=8,
+                           n_parts=16, loss=loss, churn=churn,
+                           n_partitions=n_partitions).run()
+        sc.check_invariants()

@@ -6,6 +6,8 @@ import random
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.protocol
+
 from repro.core import (Agent, AgentConfig, LinkModel, Msg, PieceExchange,
                         PieceManifest, RollingRate, SimRuntime,
                         TrackerConfig, TrackerServer, iter_bits,

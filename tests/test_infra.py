@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.jax_slow
+
 from repro.checkpoint.store import CheckpointStore, async_save
 from repro.data.pipeline import (LeasedBatchPipeline, SyntheticTokens,
                                  TokenFileStore)

@@ -1,6 +1,8 @@
 """Lease lifecycle: drop_volunteer, TAIL expiry re-DIST, BYE reclamation."""
 import pytest
 
+pytestmark = pytest.mark.protocol
+
 from repro.core import (Agent, AgentConfig, LeaseTable, SimRuntime,
                         TrackerConfig, TrackerServer, make_prime_app)
 

@@ -4,6 +4,8 @@ import time
 
 import pytest
 
+pytestmark = pytest.mark.protocol
+
 from repro.core import (Agent, AgentConfig, LinkModel, Msg, PieceExchange,
                         PieceManifest, SimRuntime, ThreadRuntime,
                         TrackerConfig, TrackerServer, make_prime_app,
@@ -280,6 +282,72 @@ def test_corrupt_piece_rerouted_to_other_holder_immediately():
     assert set(px.pending["a"][0]) == {"B"}
     reqs = [(d, msg) for d, msg in log if msg.kind == PIECE_REQ]
     assert [d for d, _ in reqs] == ["A", "B"]
+
+
+def test_recover_rerequests_stale_piece_from_alternate_holder():
+    """The pending staleness sweep: a PIECE_DATA that never arrives is
+    withdrawn after `stall_s` (PIECE_CANCEL to the silent holder, load
+    released) and re-requested from an ALTERNATE holder — the silent one
+    is shunned for that piece, so a black-holed link cannot capture the
+    retries forever."""
+    clock = [0.0]
+    cfg = AgentConfig()
+    log = []
+    px = PieceExchange("L", cfg, send=lambda d, m: log.append((d, m)),
+                       now=lambda: clock[0], tracker_id="server")
+    m = PieceManifest.synthetic("a", 1_000, 1_000)       # one piece
+    px.join("a", m)
+    px.note_full_seeders("a", {"A", "B"})
+    px.unchoked_by["a"] |= {"A", "B"}
+    px.pump("a")
+    assert set(px.pending["a"][0]) == {"A"}              # name tie-break
+    assert px.peer_load["A"] == 1
+    # A never answers: after the stall the request is withdrawn …
+    clock[0] = 10.0
+    px.recover("a", stall_s=5.0)
+    assert [d for d, msg in log if msg.kind == PIECE_CANCEL] == ["A"]
+    assert px.peer_load["A"] == 0
+    # … and re-issued to B, not back to the silent A
+    reqs = [d for d, msg in log if msg.kind == PIECE_REQ]
+    assert reqs == ["A", "B"]
+    assert set(px.pending["a"][0]) == {"B"}
+    # B serves it: the piece completes and the stale history is dropped
+    px.on_piece_data(Msg(PIECE_DATA, "B",
+                         {"app_id": "a", "piece_id": 0,
+                          "proof": m.piece_hashes[0], "mask": 1}))
+    assert px.inventories["a"].complete
+    assert 0 not in px.stalled_holders.get("a", {})
+
+
+def test_recover_reannounces_when_no_holder_unchokes():
+    """A leecher whose join HAVE died on the wire re-announces to the
+    tracker from the staleness sweep, instead of waiting forever for a
+    swarm that never learned it exists."""
+    clock = [0.0]
+    log = []
+    px = PieceExchange("L", AgentConfig(),
+                       send=lambda d, m: log.append((d, m)),
+                       now=lambda: clock[0], tracker_id="server")
+    m = PieceManifest.synthetic("a", 2_000, 1_000)
+    px.join("a", m)
+    assert [d for d, msg in log if msg.kind == HAVE] == ["server"]
+    clock[0] = 30.0
+    px.recover("a", stall_s=5.0)
+    # no holder ever unchoked us -> interest cleared + HAVE re-announced
+    assert [d for d, msg in log if msg.kind == HAVE] == ["server", "server"]
+
+
+def test_repeated_interest_repeats_lost_unchoke():
+    px, log = _engine(upload_slots=2)
+    m = PieceManifest.synthetic("a", 8_000, 1_000)
+    px.add_local_app("a", m)
+    _interested(px, "a", "P0")
+    assert [d for d, msg in log if msg.kind == UNCHOKE] == ["P0"]
+    # P0 re-expresses interest (it never saw our UNCHOKE): repeat the
+    # grant instead of silently keeping the slot allocated
+    _interested(px, "a", "P0")
+    assert [d for d, msg in log if msg.kind == UNCHOKE] == ["P0", "P0"]
+    assert px.unchoked["a"] == {"P0"}
 
 
 def test_rejected_result_does_not_spin_cached_resend_loop():

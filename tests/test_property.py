@@ -4,6 +4,8 @@ import collections
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.protocol
+
 hypothesis = pytest.importorskip("hypothesis")
 import hypothesis.strategies as st  # noqa: E402
 from hypothesis import given, settings  # noqa: E402

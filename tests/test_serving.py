@@ -4,6 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.jax_slow
+
 from repro.configs.base import get_config, reduced_config
 from repro.models import model as M
 from repro.parallel.sharding import init_params

@@ -1,6 +1,8 @@
 """Piece-wise multi-seeder distribution through the live protocol (§V)."""
 import pytest
 
+pytestmark = pytest.mark.protocol
+
 from repro.core import (Agent, AgentConfig, PieceInventory, PieceManifest,
                         SimRuntime, TrackerConfig, TrackerServer,
                         make_prime_app, register_executable,

@@ -1,6 +1,8 @@
 """End-to-end behaviour tests for the paper's tracker/agent system."""
 import pytest
 
+pytestmark = pytest.mark.protocol
+
 from repro.core import (Agent, AgentConfig, SimRuntime, TrackerConfig,
                         TrackerServer, make_prime_app)
 from repro.core.messages import Msg, RESULT

@@ -6,6 +6,8 @@ import jax
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.jax_slow
+
 from repro.cluster.elastic import plan_resize
 from repro.cluster.sdc import SDCValidator, gradient_fingerprint
 from repro.configs.base import get_config, reduced_config
