@@ -1,0 +1,91 @@
+"""Benchmark-regression guard for the swarm perf trajectory.
+
+Compares a freshly generated BENCH_swarm.json against the committed
+baseline (BENCH_baseline.json) and fails if the batched engine got
+meaningfully slower:
+
+  * logical events/s at any swept N dropped more than --evps-drop
+    (default 20%), or
+  * a Scenario VII makespan / full-replication time regressed more than
+    --makespan-drift (default 10%).
+
+Only rows present in BOTH files are compared (a CI smoke sweep that
+stops at N=500 is judged against the matching baseline rows only), so
+the full committed curve can extend beyond what CI re-runs.  Throughput
+is wall-clock dependent; the 20% band absorbs machine noise while still
+catching real algorithmic regressions.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _rows(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    return {r["name"]: r.get("metrics", {}) for r in doc.get("rows", [])}
+
+
+def check(baseline_path: str, current_path: str, evps_drop: float = 0.20,
+          makespan_drift: float = 0.10, verbose: bool = True) -> list:
+    base, cur = _rows(baseline_path), _rows(current_path)
+    failures = []
+    shared = sorted(set(base) & set(cur))
+    for name in shared:
+        b, c = base[name], cur[name]
+        for key, limit, higher_is_better in (
+                ("events_per_sec", evps_drop, True),
+                ("makespan_s", makespan_drift, False),
+                ("full_replication_s", makespan_drift, False)):
+            if key not in b or key not in c:
+                continue
+            bv, cv = float(b[key]), float(c[key])
+            if bv <= 0:
+                continue
+            ratio = cv / bv
+            bad = ratio < 1.0 - limit if higher_is_better \
+                else ratio > 1.0 + limit
+            tag = "FAIL" if bad else "ok"
+            band = 1.0 - limit if higher_is_better else 1.0 + limit
+            if verbose:
+                print(f"[guard] {tag:4s} {name}.{key}: "
+                      f"{bv:.6g} -> {cv:.6g} "
+                      f"({ratio:.2f}x, band {band:.2f}x)")
+            if bad:
+                failures.append((name, key, bv, cv))
+        # correctness riding along: a run that stopped replicating is a
+        # regression no matter how fast it got
+        for key in ("done", "replicated"):
+            if b.get(key) is True and c.get(key) is not True:
+                failures.append((name, key, True, c.get(key)))
+    if verbose:
+        print(f"[guard] compared {len(shared)} shared rows; "
+              f"{len(failures)} failure(s)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument("--current", default="BENCH_swarm.json")
+    ap.add_argument("--evps-drop", type=float, default=0.20,
+                    help="max fractional events/s drop per row")
+    ap.add_argument("--makespan-drift", type=float, default=0.10,
+                    help="max fractional makespan/replication increase")
+    args = ap.parse_args(argv)
+    failures = check(args.baseline, args.current,
+                     evps_drop=args.evps_drop,
+                     makespan_drift=args.makespan_drift)
+    if failures:
+        for name, key, bv, cv in failures:
+            print(f"[guard] REGRESSION {name}.{key}: {bv} -> {cv}",
+                  file=sys.stderr)
+        return 1
+    print("[guard] no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -368,7 +368,9 @@ def scenario_vi(verbose: bool = True, n_volunteers: int = 24,
 def scenario_vii(verbose: bool = True, n_volunteers: int = 200,
                  image_mb: float = 64.0, n_pieces: int = 64,
                  n_parts: Optional[int] = None, m_min: int = 1,
-                 uplink_mbps: float = 100.0, until_h: float = 8.0) -> dict:
+                 uplink_mbps: float = 100.0, until_h: float = 8.0,
+                 batched: bool = False, tick_s: float = 0.5,
+                 backend: Optional[str] = None) -> dict:
     """Scenario VII: flash crowd at production-ish scale (default N=200).
 
     The paper validates the protocol on six nodes; BOINC-class deployments
@@ -381,6 +383,14 @@ def scenario_vii(verbose: bool = True, n_volunteers: int = 200,
     trajectory.  Only feasible since the PieceExchange bookkeeping went
     incremental: the pre-optimization engine rebuilt an O(pieces × peers)
     availability map per pump and capped practical runs at N≈24.
+
+    `batched=True` switches to the array-native path (core/swarm_arrays):
+    one shared SwarmHub makes all piece/choke decisions in batched
+    per-tick kernel passes and the control plane moves through the arrays
+    instead of O(N^2) wire messages — the mode that reaches N=2000.  In
+    batched mode `events` counts heap pops only; `logical_events` adds
+    the control-plane deliveries the arrays replaced, and both rates are
+    reported (`events_per_sec` is logical, `heap_events_per_sec` raw).
     """
     import resource
     import time as _time
@@ -396,7 +406,16 @@ def scenario_vii(verbose: bool = True, n_volunteers: int = 200,
     rt.add_node(TrackerServer(config=TrackerConfig(ping_interval_s=5.0)))
     cfg = dict(work_timeout_s=600.0, status_interval_s=5.0,
                rechoke_interval_s=5.0)
-    host = Agent("host", config=AgentConfig(**cfg))
+    hub = None
+    if batched:
+        from repro.core.swarm_arrays import SwarmHub
+        hub = SwarmHub(backend=backend)
+        rt.crash_hooks.append(hub.node_gone)
+        # at flash-crowd scale, cap the replica *seeder* set: seeders
+        # beyond a handful add tracker/gossip bookkeeping, not download
+        # capacity (every completed volunteer still serves pieces)
+        cfg["max_replica_seeders"] = 8
+    host = Agent("host", config=AgentConfig(**cfg), hub=hub)
     rt.add_node(host)
     app = make_prime_app("appvii", "host", 3, 48_000, n_parts=n_parts,
                          sim_time_per_number=2e-3, m_min=m_min, swarm=True,
@@ -405,16 +424,21 @@ def scenario_vii(verbose: bool = True, n_volunteers: int = 200,
     host.host_app(app)
     agents = [host]
     for i in range(n_volunteers):
-        a = Agent(f"V{i:03d}", config=AgentConfig(**cfg))
+        a = Agent(f"V{i:03d}", config=AgentConfig(**cfg), hub=hub)
         # heterogeneous volunteer speeds, as in Scenario IV/VI
         rt.add_node(a, speed=1.0 - 0.4 * i / max(n_volunteers, 1))
         agents.append(a)
 
+    def _run(until, stop_when):
+        if hub is not None:
+            return rt.run_batched(until=until, stop_when=stop_when,
+                                  tick_s=tick_s, on_tick=hub.tick)
+        return rt.run(until=until, stop_when=stop_when)
+
     t0 = _time.perf_counter()
     # phase 1 — work: cheap O(1) stop probe; the host records completion
     # the moment the last part validates (directly or via PART_DONE gossip)
-    rt.run(until=until_h * H,
-           stop_when=lambda: "appvii" in host.completed_at)
+    _run(until_h * H, lambda: "appvii" in host.completed_at)
     work_done_s = rt.now()
     # phase 2 — full replication: the flash crowd ends when every
     # volunteer holds the verified image (the swarm keeps moving pieces
@@ -425,13 +449,16 @@ def scenario_vii(verbose: bool = True, n_volunteers: int = 200,
         not_done[:] = [a for a in not_done if "appvii" not in a.images]
         return not not_done
 
-    rt.run(until=until_h * H, stop_when=all_replicated)
+    _run(until_h * H, all_replicated)
     wall_s = max(_time.perf_counter() - t0, 1e-9)
     events = rt.events_processed
+    coalesced = hub.coalesced if hub is not None else 0
+    logical = events + coalesced
     replicas = sum(1 for a in agents[1:] if "appvii" in a.images)
     res = {
         "n_volunteers": n_volunteers,
         "image_mb": image_mb,
+        "batched": batched,
         "done": "appvii" in host.completed_at,
         "makespan_s": work_done_s,
         "full_replication_s": rt.now(),
@@ -439,18 +466,27 @@ def scenario_vii(verbose: bool = True, n_volunteers: int = 200,
         "origin_up_mb": rt.tx_bytes.get("host", 0) / 1e6,
         "replicas": replicas,
         "events": events,
-        "events_per_sec": events / wall_s,
+        "logical_events": logical,
+        "events_per_sec": logical / wall_s,
+        "heap_events_per_sec": events / wall_s,
+        "nodes_per_sec": (n_volunteers + 1) / wall_s,
         "wall_s": wall_s,
         "peak_rss_mb": resource.getrusage(
             resource.RUSAGE_SELF).ru_maxrss / 1024.0,
     }
+    if hub is not None:
+        res.update(hub.stats())
+        res["backend"] = hub.backend
     if verbose:
-        print(f"[scenarioVII] N={n_volunteers} img={image_mb:.0f}MB: "
+        mode = " batched" if batched else ""
+        print(f"[scenarioVII{mode}] N={n_volunteers} "
+              f"img={image_mb:.0f}MB: "
               f"makespan={res['makespan_s']:.0f}s "
               f"replication={res['full_replication_s']:.0f}s "
               f"origin_up={res['origin_up_mb']:.0f}MB "
               f"replicas={res['replicas']} done={res['done']} | sim: "
-              f"{res['events']} events in {res['wall_s']:.1f}s "
+              f"{res['logical_events']} logical events "
+              f"({res['events']} heap) in {res['wall_s']:.1f}s "
               f"({res['events_per_sec']:.0f}/s) "
               f"peak_rss={res['peak_rss_mb']:.0f}MB")
     return res

@@ -124,6 +124,63 @@ def bench_live(verbose: bool = True, n_volunteers: int = 8,
     return rows
 
 
+def bench_sweep(ns, verbose: bool = True, backend=None,
+                tick_s: float = 0.5):
+    """N-sweep of the *batched* array-native Scenario VII: one row per N
+    with events/s (logical and heap), wall-clock and peak RSS.  This is
+    the scaling curve the batched engine exists for — the per-message
+    path tops out around N≈500 while the hub path reaches N=2000."""
+    from benchmarks.paper_tables import scenario_vii
+    rows = []
+    for n in ns:
+        res = scenario_vii(verbose=False, n_volunteers=n, batched=True,
+                           backend=backend, tick_s=tick_s)
+        row = {
+            "name": f"swarm_sweep_batched_n{n}",
+            "us_per_call": 0.0,
+            "derived": (f"makespan {res['makespan_s']:.0f}s replication "
+                        f"{res['full_replication_s']:.0f}s replicas "
+                        f"{res['replicas']}/{n} | "
+                        f"{res['events_per_sec']:.0f} logical ev/s "
+                        f"({res['heap_events_per_sec']:.0f} heap) "
+                        f"wall {res['wall_s']:.1f}s "
+                        f"rss {res['peak_rss_mb']:.0f}MB "
+                        f"[{res['backend']}]"),
+            "metrics": {k: res[k] for k in
+                        ("n_volunteers", "makespan_s",
+                         "full_replication_s", "origin_up_mb", "replicas",
+                         "done", "replicated", "events", "logical_events",
+                         "events_per_sec", "heap_events_per_sec",
+                         "batch_ops", "coalesced_events", "ticks",
+                         "wall_s", "peak_rss_mb", "backend")},
+        }
+        rows.append(row)
+        if verbose:
+            print(f"[swarm] {row['name']}: {row['derived']}")
+    return rows
+
+
+def merge_rows(path, rows):
+    """Merge bench rows into an existing BENCH json by row name (new rows
+    replace same-named rows, others are preserved) so `--sweep` runs can
+    update the scaling curve without clobbering the rest of the file."""
+    import json
+    import os
+    doc = {"bench": "swarm", "rows": []}
+    if os.path.exists(path):
+        with open(path) as f:
+            doc = json.load(f)
+    by_name = {r["name"]: i for i, r in enumerate(doc.get("rows", []))}
+    for r in rows:
+        if r["name"] in by_name:
+            doc["rows"][by_name[r["name"]]] = r
+        else:
+            doc["rows"].append(r)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, default=str)
+    return doc
+
+
 def bench(verbose: bool = True, smoke: bool = False):
     rows = []
     plan_cases = [(8, 8), (16, 16), (64, 64)] if smoke else \
@@ -179,7 +236,23 @@ def main(argv=None) -> None:
                     help="reduced scale for CI")
     ap.add_argument("--json", metavar="PATH",
                     help="write rows as JSON (perf trajectory artifact)")
+    ap.add_argument("--sweep", metavar="N1,N2,...",
+                    help="run ONLY the batched Scenario VII N-sweep at "
+                         "these sizes (e.g. 50,200,500,1000,2000); with "
+                         "--json, rows are merged into the file by name "
+                         "instead of overwriting it")
+    ap.add_argument("--backend", choices=("numpy", "jax", "pallas"),
+                    help="kernel backend for --sweep (default: best "
+                         "available)")
     args = ap.parse_args(argv)
+    if args.sweep:
+        ns = [int(x) for x in args.sweep.split(",") if x.strip()]
+        rows = bench_sweep(ns, backend=args.backend)
+        if args.json:
+            merge_rows(args.json, rows)
+            print(f"[swarm] merged {len(rows)} sweep rows "
+                  f"into {args.json}")
+        return
     rows = bench(smoke=args.smoke)
     if args.json:
         with open(args.json, "w") as f:

@@ -93,12 +93,19 @@ class AgentConfig:
     # (pure replication, BitTorrent-style seeding): lets a volunteer that
     # crash-restarted after completion still converge to a full replica
     replicate_completed: bool = False
+    # stop registering as a replica *seeder* (SEEDER_UPDATE + scheduling
+    # state) once the app already lists this many seeders.  None keeps
+    # every completed volunteer a seeder; large-N benchmarks cap it so
+    # per-seeder bookkeeping and gossip stay O(cap), not O(N).  Piece
+    # serving is unaffected — completed nodes keep answering PIECE_REQs.
+    max_replica_seeders: Optional[int] = None
 
 
 class Agent(Node):
     def __init__(self, node_id: str, server_id: str = "server",
                  config: Optional[AgentConfig] = None,
-                 val_hook: Optional[Callable[[int, Any], bool]] = None):
+                 val_hook: Optional[Callable[[int, Any], bool]] = None,
+                 hub=None):
         self.node_id = node_id
         self.server_id = server_id
         self.cfg = config or AgentConfig()
@@ -138,7 +145,7 @@ class Agent(Node):
             node_id, self.cfg, send=self.SEND, now=lambda: self.rt.now(),
             tracker_id=server_id, dirs=self.dir,
             on_image_complete=self._on_image_complete,
-            on_bytes=self._on_piece_bytes)
+            on_bytes=self._on_piece_bytes, hub=hub)
 
     def _on_piece_bytes(self, app_id: str, nbytes: int) -> None:
         self.leech_bytes[app_id] += nbytes
@@ -633,6 +640,12 @@ class Agent(Node):
         the registry and join the seeder set as a replica."""
         self.images[app_id] = manifest_hash
         entry = resolve_executable(manifest_hash)
+        cap = self.cfg.max_replica_seeders
+        if cap is not None:
+            row = next((r for r in self.app_list if r.app_id == app_id),
+                       None)
+            if row is not None and len(row.seeders) >= cap:
+                entry = None     # enough seeders already; serve pieces only
         if (self.cfg.replica_seed and entry is not None
                 and entry.blueprint is not None
                 and app_id not in self.apps

@@ -86,10 +86,20 @@ class ChaosScenario:
                  uplink_mbps: float = 100.0,
                  sim_time_per_number: float = 2e-3,
                  root_dir: Optional[str] = None,
-                 plan: Optional[FaultPlan] = None):
+                 plan: Optional[FaultPlan] = None,
+                 batched: bool = False, tick_s: float = 0.5,
+                 backend: Optional[str] = None):
         self.seed = seed
         self.m_min = m_min
         self.until_s = until_s
+        self.tick_s = tick_s
+        # batched mode: all PieceExchanges share a SwarmHub and the run
+        # drives SimRuntime.run_batched — the array-native path under the
+        # same fault plan (piece traffic still crosses the faulty links)
+        self.hub = None
+        if batched:
+            from repro.core.swarm_arrays import SwarmHub
+            self.hub = SwarmHub(backend=backend)
         self.vol_ids = [f"V{i:02d}" for i in range(n_volunteers)]
         self.plan = plan if plan is not None else make_chaos_plan(
             seed, self.vol_ids, horizon_s=horizon_s, loss=loss, dup=dup,
@@ -101,6 +111,11 @@ class ChaosScenario:
         self.rt = SimRuntime(link=LinkModel(uplink_Bps=link_Bps,
                                             downlink_Bps=link_Bps),
                              faults=self.plan)
+        if self.hub is not None:
+            # authoritative liveness for the shared arrays: reset a
+            # crashed node's row at crash time, not on (possibly stale)
+            # PEER_GONE relays that may trail its restart
+            self.rt.crash_hooks.append(self.hub.node_gone)
         self.rt.add_node(TrackerServer(
             config=TrackerConfig(ping_interval_s=2.0)))
         self.server = self.rt.nodes["server"]
@@ -131,7 +146,7 @@ class ChaosScenario:
         self.makespan_s: Optional[float] = None
 
     def _make_agent(self, node_id: str) -> Agent:
-        a = Agent(node_id, config=AgentConfig(**self._cfg))
+        a = Agent(node_id, config=AgentConfig(**self._cfg), hub=self.hub)
         self.incarnations.setdefault(node_id, []).append(a)
         return a
 
@@ -153,7 +168,12 @@ class ChaosScenario:
         return True
 
     def run(self) -> "ChaosScenario":
-        self.rt.run(until=self.until_s, stop_when=self._converged)
+        if self.hub is not None:
+            self.rt.run_batched(until=self.until_s,
+                                stop_when=self._converged,
+                                tick_s=self.tick_s, on_tick=self.hub.tick)
+        else:
+            self.rt.run(until=self.until_s, stop_when=self._converged)
         self.makespan_s = self.rt.now()
         return self
 
@@ -196,11 +216,38 @@ class ChaosScenario:
                     assert int(arr[p]) == naive[p], self._fail(
                         f"{a.node_id} availability drift at piece {p}: "
                         f"incremental {int(arr[p])} != naive {naive[p]}")
+        # batched mode: the shared arrays must agree with themselves and
+        # with every live engine's verified inventory after the trace
+        if self.hub is not None:
+            for st in self.hub.states.values():
+                n = st.n
+                col_sums = st.have[:n].sum(axis=0, dtype=int)
+                for p in range(st.P):
+                    assert int(st.counts[p]) == int(col_sums[p]), \
+                        self._fail(f"hub count drift at piece {p}: "
+                                   f"{int(st.counts[p])} != "
+                                   f"{int(col_sums[p])}")
+                for a in survivors:
+                    i = st.row.get(a.node_id)
+                    if i is None or st.clients[i] is not a.px:
+                        continue
+                    inv = a.px.inventories.get(st.app_id)
+                    if inv is None:
+                        continue
+                    row_have = {p for p in range(st.P) if st.have[i, p]}
+                    assert row_have == set(inv.have), self._fail(
+                        f"hub row for {a.node_id} disagrees with its "
+                        f"inventory")
 
     def report(self) -> dict:
         rt = self.rt
+        if self.hub is not None:
+            hub_stats = self.hub.stats()
+        else:
+            hub_stats = {}
         return {
             "seed": self.seed,
+            **hub_stats,
             "done": self.app.done,
             "replicated": self._converged(),
             "makespan_s": self.makespan_s if self.makespan_s is not None
@@ -228,10 +275,13 @@ def main(argv=None) -> None:
     ap.add_argument("--partitions", type=int, default=1)
     ap.add_argument("--check", action="store_true",
                     help="assert the chaos invariants after the run")
+    ap.add_argument("--batched", action="store_true",
+                    help="run the array-native batched swarm path")
     args = ap.parse_args(argv)
     sc = ChaosScenario(seed=args.seed, n_volunteers=args.volunteers,
                        loss=args.loss, jitter_s=args.jitter,
-                       churn=args.churn, n_partitions=args.partitions)
+                       churn=args.churn, n_partitions=args.partitions,
+                       batched=args.batched)
     sc.run()
     print(sc.report())
     if args.check:

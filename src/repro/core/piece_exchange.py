@@ -147,7 +147,8 @@ class PieceExchange:
                  tracker_id: str = "server",
                  dirs=None,
                  on_image_complete: Optional[Callable] = None,
-                 on_bytes: Optional[Callable[[str, int], None]] = None):
+                 on_bytes: Optional[Callable[[str, int], None]] = None,
+                 hub=None):
         self.node_id = node_id
         self.cfg = cfg
         self.send = send
@@ -156,6 +157,12 @@ class PieceExchange:
         self.dirs = dirs
         self.on_image_complete = on_image_complete
         self.on_bytes = on_bytes
+        # hub mode (core/swarm_arrays.SwarmHub): decisions come from the
+        # shared arrays' batched per-tick passes instead of per-message
+        # pumps, and the control plane (HAVE fan-out, INTERESTED,
+        # UNCHOKE/CHOKE) is applied through the arrays instead of the
+        # wire.  Piece traffic stays on the simulated wire either way.
+        self.hub = hub
         # False switches pump to the pre-optimization reference path
         # (kept for differential tests and the exchange micro-benchmark)
         self.use_incremental = True
@@ -228,6 +235,8 @@ class PieceExchange:
             if manifest.content_hashed:
                 image = intern_image(manifest.manifest_hash, image)
             self.image_src[app_id] = memoryview(image)
+        if self.hub is not None:
+            self.hub.register_seed(self, app_id, manifest)
 
     def join(self, app_id: str, manifest: PieceManifest) -> None:
         """Start leeching an app image piece-wise; announces the bitfield
@@ -238,6 +247,17 @@ class PieceExchange:
         self.manifests.setdefault(app_id, manifest)
         inv = self.inventories.setdefault(app_id, PieceInventory(manifest))
         self.fetching.add(app_id)
+        if self.hub is not None:
+            # hub mode: the shared arrays replace the tracker announce +
+            # HAVE relay discovery loop; cache-restored pieces are folded
+            # into the swarm-wide availability directly
+            self.hub.register_leech(self, app_id, manifest)
+            self._rescan_cache(app_id, inv)
+            for piece_id in inv.have:
+                self.hub.note_have(self, app_id, piece_id)
+            if inv.complete:
+                self._complete_fetch(app_id)
+            return
         # build the availability index now: announces that arrived before
         # the manifest get folded in (and complete peers promoted) here
         self._arrays(app_id)
@@ -305,6 +325,10 @@ class PieceExchange:
             self.store.pop(app_id, None)
 
     def on_peer_gone(self, node: str) -> None:
+        # hub mode: the runtime's crash hook already reset the node's row
+        # (PEER_GONE relays can trail a restart; acting on them here
+        # would wipe the fresh incarnation's state) — only the local
+        # per-engine bookkeeping below needs cleaning
         for app_id, masks in self.peer_masks.items():
             mask = masks.pop(node, None)
             if mask:
@@ -517,6 +541,10 @@ class PieceExchange:
         array) plus O(1) per issued request — and O(1) outright when the
         pipeline is already full, which is the common case for the pumps
         triggered by every HAVE announce in a busy swarm."""
+        if self.hub is not None:
+            # hub mode: requests are matched in the next batched tick
+            self.hub.mark_dirty(self, app_id)
+            return
         if not self.use_incremental:
             return self._pump_reference(app_id)
         inv = self.inventories.get(app_id)
@@ -807,6 +835,8 @@ class PieceExchange:
             self._unchoke(app_id, peer)
 
     def _unchoke(self, app_id: str, peer: str) -> None:
+        if self.hub is not None and self.hub.grant(self, app_id, peer):
+            return           # applied through the arrays, nothing on wire
         self.unchoked[app_id].add(peer)
         self.send(peer, Msg(UNCHOKE, self.node_id,
                             {"app_id": app_id}, size_bytes=64))
@@ -816,6 +846,8 @@ class PieceExchange:
                 self._serve(app_id, peer, piece_id)
 
     def _choke(self, app_id: str, peer: str) -> None:
+        if self.hub is not None and self.hub.choke(self, app_id, peer):
+            return
         self.unchoked[app_id].discard(peer)
         self.send(peer, Msg(CHOKE, self.node_id,
                             {"app_id": app_id}, size_bytes=64))
@@ -852,6 +884,8 @@ class PieceExchange:
         window instead of dominating rechoke decisions forever."""
         if not self.cfg.choke:
             return
+        if self.hub is not None:
+            return           # the hub reranks every holder per tick batch
         self._rechoke_round += 1
         every = max(int(getattr(self.cfg, "optimistic_every", 3)), 1)
         rotate = self._rechoke_round % every == 0
@@ -961,6 +995,9 @@ class PieceExchange:
         if data is not None:
             payload["data"] = data
         self._credit_to(peer, manifest.piece_size(piece_id))
+        if self.hub is not None:
+            self.hub.credit(self, app_id, peer,
+                            manifest.piece_size(piece_id), received=False)
         self.send(peer, Msg(PIECE_DATA, self.node_id, payload,
                             size_bytes=96 + manifest.piece_size(piece_id)
                             + mask_nbytes(mask)))
@@ -997,6 +1034,8 @@ class PieceExchange:
         manifest = inv.manifest
         nbytes = manifest.piece_size(piece_id)
         self._credit_from(peer, nbytes)
+        if self.hub is not None:
+            self.hub.credit(self, app_id, peer, nbytes, received=True)
         self.pieces_from[app_id][peer] += 1
         if data is not None:
             self.store[app_id][piece_id] = data
@@ -1006,6 +1045,13 @@ class PieceExchange:
             self.on_bytes(app_id, nbytes)
         # endgame reconciliation: the race is decided, cancel the rest
         self._reconcile(app_id, piece_id)
+        if self.hub is not None:
+            # hub mode: one array write replaces the whole announce
+            # fan-out (the hub counts the suppressed deliveries)
+            self.hub.note_have(self, app_id, piece_id)
+            if inv.complete:
+                self._complete_fetch(app_id)
+            return
         # announce to known peers directly AND via the tracker relay.  The
         # relay alone would suffice for reach, but the extra hop delays
         # rarity information enough to push measurably more piece traffic
@@ -1029,6 +1075,8 @@ class PieceExchange:
         stalled = self.stalled_holders.get(app_id)
         if stalled:
             stalled.pop(piece_id, None)      # decided: forget stale history
+        if self.hub is not None:
+            self.hub.mark_dirty(self, app_id)
         asked = self.pending[app_id].pop(piece_id, None)
         if not asked:
             return
@@ -1049,6 +1097,8 @@ class PieceExchange:
         self.fetching.discard(app_id)
         for piece_id in list(self.pending.get(app_id, {})):
             self._reconcile(app_id, piece_id)
+        if self.hub is not None:
+            self.hub.set_full(self, app_id)
         image = None
         if inv.manifest.content_hashed:
             mh = inv.manifest.manifest_hash
@@ -1091,7 +1141,8 @@ class PieceExchange:
             if not asked:
                 del pending[piece_id]
         # allow a fresh INTERESTED round toward holders that never answered
-        if app_id in self.fetching and not self.unchoked_by[app_id]:
+        if (self.hub is None and app_id in self.fetching
+                and not self.unchoked_by[app_id]):
             self.interest_sent[app_id].clear()
             self._interest_clean.discard(app_id)
             # re-announce to the tracker: with no holder granting us a

@@ -143,6 +143,10 @@ class SimRuntime(Runtime):
         self._ps_jobs: Dict[str, Dict[int, list]] = {}
         self._ps_last: Dict[str, float] = {}
         self._ps_event: Dict[str, int] = {}
+        # called with the node id on every crash() — the authoritative
+        # liveness signal for batched-mode swarm state (PEER_GONE relays
+        # can arrive after a restart and must not wipe the fresh state)
+        self.crash_hooks: List[Callable[[str], None]] = []
         # --- fault injection (core.faults) ----------------------------- #
         self.faults = faults
         self._rng = random.Random(faults.seed) if faults is not None else None
@@ -248,6 +252,8 @@ class SimRuntime(Runtime):
         self.crashed.add(node_id)
         self._crashed_nodes[node_id] = (node, self.speed.get(node_id, 1.0))
         self.crash_count += 1
+        for hook in self.crash_hooks:
+            hook(node_id)
         for key in [k for k in self._timer_ver if k[0] == node_id]:
             self._timer_ver[key] += 1        # every armed timer dies
         self._ps_jobs.pop(node_id, None)
@@ -369,6 +375,55 @@ class SimRuntime(Runtime):
             n += 1
             if stop_when is not None and n % 64 == 0 and stop_when():
                 break
+        self.events_processed += n
+        return self._t
+
+    def run_batched(self, until: Optional[float] = None,
+                    stop_when: Optional[Callable[[], bool]] = None,
+                    tick_s: float = 0.25,
+                    on_tick: Optional[Callable[[float], None]] = None,
+                    max_events: int = 50_000_000) -> float:
+        """Batched-delivery mode: drain every due event up to the next
+        tick boundary in one burst, then call `on_tick(now)` (the
+        SwarmHub's batched decision pass) at the boundary.
+
+        Shares `run()`'s heap, its single monotonic `_seq` counter and
+        the `events_processed` total, so the two modes can interleave
+        freely — same-tick events keep their insertion order no matter
+        which mode pops them, and with `on_tick=None` this produces a
+        trace identical to `run()` pop for pop (the mixed-mode
+        determinism regression test asserts exactly that).
+
+        Events scheduled *during* a burst at times inside the current
+        tick are drained in the same burst, so intra-tick message
+        cascades behave as in per-message mode; only the on_tick hook
+        itself runs at quantized times."""
+        n = 0
+        heap = self._heap
+        tick = max(float(tick_s), 1e-9)
+        stop = False
+        while heap and n < max_events and not stop:
+            t0 = heap[0][0]
+            if until is not None and t0 > until:
+                break
+            boundary = t0 + tick
+            if until is not None:
+                boundary = min(boundary, until)
+            while heap and heap[0][0] <= boundary and n < max_events:
+                t, _, fn, args = heapq.heappop(heap)
+                self._t = t
+                fn(*args)
+                n += 1
+                if stop_when is not None and n % 64 == 0 and stop_when():
+                    stop = True
+                    break
+            if stop:
+                break
+            if on_tick is not None:
+                self._t = max(self._t, boundary)
+                on_tick(self._t)
+                if stop_when is not None and stop_when():
+                    break
         self.events_processed += n
         return self._t
 

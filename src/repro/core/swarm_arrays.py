@@ -1,0 +1,781 @@
+"""Array-native swarm state + the batched per-tick decision engine.
+
+`PieceExchange` (core/piece_exchange.py) makes every scheduling decision
+one Python call at a time — a pump per HAVE announce, a choke pass per
+holder, one heap event per protocol message.  That per-message dispatch
+caps practical swarm sizes near N=200 (ROADMAP: "N=2000+ flash crowds
+via batched, array-native simulation").  This module is the batched
+counterpart:
+
+  * `SwarmState` — one app's swarm as flat numpy arrays over *rows*
+    (nodes): peer x piece `have` bitmask matrix, per-piece availability
+    `counts`, full-seeder / fetching flags, the holder x leecher
+    `unchoked` slot matrix, and per-link rolling transfer-byte matrices
+    for the reciprocity ranking.  Rows are stable for a node's lifetime;
+    capacity doubles on demand.
+
+  * `SwarmHub` — the per-tick engine.  Agents' `PieceExchange` instances
+    register with the hub (hub mode); verified pieces, completions and
+    pending-set changes are mirrored into the arrays, and once per
+    simulation tick the hub runs the whole swarm's decisions as batched
+    array passes using the `swarm_kernels` backends (numpy / jax /
+    Pallas):
+
+      1. slot release   — upload slots held by newly-completed leechers
+                          are freed (the batched `_promote_full_seeder`);
+      2. grants         — holders with free slots unchoke the
+                          lowest-named interested leechers (the batched
+                          `_maybe_unchoke_now` fast path);
+      3. rechoke        — every `rechoke_interval_s` of sim time, all
+                          holders re-rank candidates by reciprocal
+                          transfer rates in ONE `choke_order` kernel
+                          call, with the scalar engine's deterministic
+                          optimistic-unchoke rotation;
+      4. pump           — all dirty/starved leechers' rarest-first
+                          orders come from ONE `rarest_orders` kernel
+                          call; request matching walks each order with
+                          the scalar tie-breaks (shunned-last,
+                          lowest name; one in-flight request per
+                          holder);
+      5. endgame        — leechers whose every missing piece is in
+                          flight duplicate requests to alternate
+                          holders, capped at `endgame_dup`, in the
+                          scalar holder order.
+
+The *decisions* are the scalar engine's, bit for bit where the
+information sets coincide (the differential tests in
+tests/test_swarm_batch.py mirror a scalar engine's view into a
+`SwarmState` and assert request-for-request identical output).  What
+changes is the *information flow*: the shared arrays stand in for the
+HAVE announce fan-out, INTERESTED declarations, and UNCHOKE/CHOKE
+notifications, which in hub mode are applied directly instead of being
+delivered as O(N^2) wire messages.  Piece traffic itself (PIECE_REQ /
+PIECE_DATA / PIECE_CANCEL) stays on the simulated wire — link
+serialization, faults, chaos hooks and partitions still apply to every
+byte moved.  Two measured approximations follow, both documented in
+docs/torrent_protocol.md: control-plane updates have zero latency (and
+ignore partitions), and choke ranking reads two-bucket tumbling-window
+rates instead of the scalar deque estimator.
+
+Every suppressed control message is counted in `coalesced` and every
+array-applied decision in `batch_ops`, so benchmark events/s can be
+reported both ways (logical vs heap events; see benchmarks/swarm_bench).
+"""
+from __future__ import annotations
+
+import collections
+from typing import Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.core.swarm_kernels import choke_order, get_backend, rarest_orders
+
+# rows that must lose every name tie-break (non-candidates) get this rank
+_RANK_INF = np.int64(2 ** 31)
+
+
+class SwarmState:
+    """One app's swarm as flat arrays; rows are nodes (stable ids)."""
+
+    def __init__(self, app_id: str, manifest, capacity: int = 64):
+        self.app_id = app_id
+        self.manifest = manifest
+        self.P = int(manifest.n_pieces)
+        cap = max(int(capacity), 4)
+        self.names: List[str] = []
+        self.row: Dict[str, int] = {}
+        self.clients: List[Optional[object]] = []   # row -> PieceExchange
+        self.n = 0                                  # rows in use
+        self.n_alive = 0
+        # --- holdings ----------------------------------------------------- #
+        self.have = np.zeros((cap, self.P), dtype=bool)
+        self.counts = np.zeros(self.P, dtype=np.int32)
+        self.have_n = np.zeros(cap, dtype=np.int32)
+        self.full = np.zeros(cap, dtype=bool)
+        self.fetching = np.zeros(cap, dtype=bool)
+        self.alive = np.zeros(cap, dtype=bool)
+        # --- choke / link state ------------------------------------------- #
+        # unchoked[h, l]: holder h currently grants leecher l a slot
+        self.unchoked = np.zeros((cap, cap), dtype=bool)
+        # rolling two-bucket transfer-byte windows, [holder, leecher]:
+        # recv = bytes the holder received FROM the peer (rate_from),
+        # sent = bytes the holder served TO the peer (rate_to)
+        self.recv = np.zeros((cap, cap), dtype=np.float32)
+        self.sent = np.zeros((cap, cap), dtype=np.float32)
+        self.recv_prev = np.zeros((cap, cap), dtype=np.float32)
+        self.sent_prev = np.zeros((cap, cap), dtype=np.float32)
+        self.win_start = 0.0
+        # optimistic-unchoke rotation (scalar `_opt_idx`/`opt_unchoked`)
+        self.opt_idx = np.zeros(cap, dtype=np.int64)
+        self.opt_peer = np.full(cap, -1, dtype=np.int32)
+        # --- selection tie-breaks ----------------------------------------- #
+        # per-node rarest-first rotation: sum(ord(c) for c in name+app_id)
+        self.offsets = np.zeros(cap, dtype=np.int64)
+        self._ranks = np.zeros(cap, dtype=np.int64)
+        self._ranks_dirty = True
+        # --- scheduling bookkeeping --------------------------------------- #
+        self.dirty: Set[int] = set()       # rows to re-pump this tick
+        self.starved = np.zeros(cap, dtype=bool)
+        self.avail_epoch = 0               # bumped on any availability change
+        self.pump_epoch = -1               # avail_epoch at the last pump pass
+        self.newly_full: List[int] = []    # rows completed since last tick
+        self.last_rechoke = 0.0
+        self.rechoke_round = 0
+
+    # ------------------------------ rows -------------------------------- #
+    def _grow(self, need: int) -> None:
+        cap = self.have.shape[0]
+        new = cap
+        while new < need:
+            new *= 2
+        grown: Dict[str, np.ndarray] = {}
+        for name in ("have",):
+            a = getattr(self, name)
+            b = np.zeros((new, self.P), dtype=a.dtype)
+            b[:cap] = a
+            grown[name] = b
+        for name in ("have_n", "full", "fetching", "alive", "offsets",
+                     "_ranks", "starved", "opt_idx", "opt_peer"):
+            a = getattr(self, name)
+            b = np.zeros(new, dtype=a.dtype)
+            if name == "opt_peer":
+                b[:] = -1
+            b[:cap] = a
+            grown[name] = b
+        for name in ("unchoked", "recv", "sent", "recv_prev", "sent_prev"):
+            a = getattr(self, name)
+            b = np.zeros((new, new), dtype=a.dtype)
+            b[:cap, :cap] = a
+            grown[name] = b
+        for name, b in grown.items():
+            setattr(self, name, b)
+
+    def ensure_row(self, name: str) -> int:
+        """Row id for a node, allocating (and growing) on first sight."""
+        i = self.row.get(name)
+        if i is not None:
+            return i
+        i = self.n
+        if i >= self.have.shape[0]:
+            self._grow(i + 1)
+        self.row[name] = i
+        self.names.append(name)
+        self.clients.append(None)
+        self.n += 1
+        self.alive[i] = True
+        self.n_alive += 1
+        self.offsets[i] = sum(ord(c) for c in name + self.app_id)
+        self._ranks_dirty = True
+        return i
+
+    @property
+    def ranks(self) -> np.ndarray:
+        """Column -> lexicographic rank of the node name: what the scalar
+        engine's string tie-breaks (`min(..., h)`, `sorted(...)`) sort
+        by, as an integer the kernels can compare."""
+        if self._ranks_dirty:
+            order = sorted(range(self.n), key=self.names.__getitem__)
+            for rank, i in enumerate(order):
+                self._ranks[i] = rank
+            self._ranks_dirty = False
+        return self._ranks
+
+    def holder_mask(self) -> np.ndarray:
+        """(n,) bool: rows currently holding at least one piece."""
+        n = self.n
+        return ((self.have_n[:n] > 0) | self.full[:n]) & self.alive[:n]
+
+
+class SwarmHub:
+    """Shared array state + batched per-tick decisions for all swarms.
+
+    One hub serves a whole simulation; `PieceExchange` instances attach
+    per app via `register_seed` / `register_leech` and mirror their
+    verified-piece / pending-set changes in.  `tick(now)` (driven by
+    `SimRuntime.run_batched`) then computes every node's grants, chokes,
+    piece requests and endgame duplicates in batched array passes.
+    """
+
+    def __init__(self, backend: Optional[str] = None):
+        self.backend = get_backend(backend)
+        self.states: Dict[str, SwarmState] = {}
+        self._cfg = None                   # choke parameters (first client)
+        self.batch_ops = 0                 # array-applied decisions
+        self.coalesced = 0                 # control messages replaced
+        self.ticks = 0
+
+    # ========================= registration ============================= #
+    def _state(self, app_id: str, manifest) -> SwarmState:
+        st = self.states.get(app_id)
+        if st is None:
+            st = self.states[app_id] = SwarmState(app_id, manifest)
+        return st
+
+    def _attach(self, px, app_id: str, manifest) -> Tuple[SwarmState, int]:
+        if self._cfg is None:
+            self._cfg = px.cfg
+        st = self._state(app_id, manifest)
+        i = st.ensure_row(px.node_id)
+        if st.clients[i] is not None and st.clients[i] is not px:
+            # same name, new incarnation (crash + restart): the fresh
+            # engine starts empty — wipe the row before re-use
+            self._reset_row(st, i)
+        if not st.alive[i]:
+            st.alive[i] = True
+            st.n_alive += 1
+        st.clients[i] = px
+        return st, i
+
+    def register_seed(self, px, app_id: str, manifest) -> None:
+        """A node holding the complete image (origin, or a restored
+        replica) joins the swarm as a pure seeder."""
+        st, i = self._attach(px, app_id, manifest)
+        st.full[i] = True
+        st.fetching[i] = False
+
+    def register_leech(self, px, app_id: str, manifest) -> None:
+        """A node starts fetching the image; pieces it already holds
+        (cache rescan) are announced separately via `note_have`."""
+        st, i = self._attach(px, app_id, manifest)
+        st.fetching[i] = True
+        st.full[i] = False
+        st.dirty.add(i)
+
+    def _reset_row(self, st: SwarmState, i: int) -> None:
+        if st.have_n[i]:
+            st.counts -= st.have[i].astype(np.int32)
+            st.have[i, :] = False
+            st.have_n[i] = 0
+            st.avail_epoch += 1
+        st.full[i] = False
+        st.fetching[i] = False
+        st.starved[i] = False
+        st.opt_peer[i] = -1
+        st.newly_full = [j for j in st.newly_full if j != i]
+        self._release_slots(st, i)
+        st.unchoked[i, :] = False
+        for m in (st.recv, st.sent, st.recv_prev, st.sent_prev):
+            m[i, :] = 0.0
+            m[:, i] = 0.0
+
+    def has_row(self, app_id: str, name: str) -> bool:
+        st = self.states.get(app_id)
+        return st is not None and name in st.row
+
+    # ====================== state change mirrors ======================== #
+    def note_have(self, px, app_id: str, piece_id: int) -> None:
+        """A piece verified locally at `px` — the array-native stand-in
+        for the swarm-wide HAVE announce fan-out."""
+        st = self.states.get(app_id)
+        if st is None:
+            return
+        i = st.row.get(px.node_id)
+        if i is None:
+            return
+        if not st.have[i, piece_id]:
+            st.have[i, piece_id] = True
+            st.have_n[i] += 1
+            st.counts[piece_id] += 1
+            st.avail_epoch += 1
+            self.batch_ops += 1
+            # the scalar engine would send one announce per swarm peer
+            # plus the tracker copy (and the tracker would relay): count
+            # the suppressed deliveries so events/s stays comparable
+            self.coalesced += 2 * max(st.n_alive - 1, 0)
+        st.dirty.add(i)
+
+    def set_full(self, px, app_id: str) -> None:
+        """`px` verified the whole image: seeder from now on."""
+        st = self.states.get(app_id)
+        if st is None:
+            return
+        i = st.row.get(px.node_id)
+        if i is None:
+            return
+        st.full[i] = True
+        st.fetching[i] = False
+        st.starved[i] = False
+        st.dirty.discard(i)
+        st.newly_full.append(i)
+
+    def mark_dirty(self, px, app_id: str) -> None:
+        """`px`'s pending set (or choke view) changed: re-pump the row on
+        the next tick.  The hub reads the pending/budget truth straight
+        from the engine's dicts, so there is nothing else to sync."""
+        st = self.states.get(app_id)
+        if st is None:
+            return
+        i = st.row.get(px.node_id)
+        if i is not None and st.fetching[i]:
+            st.dirty.add(i)
+
+    def node_gone(self, name: str) -> None:
+        """A node crashed (PEER_GONE): drop its holdings, slots and rate
+        history from every swarm.  Idempotent; a restart re-registers."""
+        for st in self.states.values():
+            i = st.row.get(name)
+            if i is None or not st.alive[i]:
+                continue
+            st.alive[i] = False
+            st.n_alive -= 1
+            self._reset_row(st, i)
+            st.avail_epoch += 1
+
+    def credit(self, px, app_id: str, peer: str, nbytes: int,
+               received: bool) -> None:
+        """Mirror of `_credit_from` / `_credit_to`: transfer bytes into
+        the rolling per-link windows the batched rechoke ranks on."""
+        st = self.states.get(app_id)
+        if st is None:
+            return
+        i = st.row.get(px.node_id)
+        j = st.row.get(peer)
+        if i is None or j is None:
+            return
+        (st.recv if received else st.sent)[i, j] += nbytes
+
+    # ========================= choke mechanics ========================== #
+    def _release_slots(self, st: SwarmState, i: int) -> None:
+        """Free every upload slot granted TO row i (batched
+        `_promote_full_seeder`): seeders stop being unchoke candidates."""
+        name = st.names[i]
+        holders = np.nonzero(st.unchoked[:st.n, i])[0]
+        for h in holders:
+            st.unchoked[h, i] = False
+            px_h = st.clients[h]
+            if px_h is not None:
+                px_h.unchoked[st.app_id].discard(name)
+                px_h.interested[st.app_id].discard(name)
+                px_h.queued_reqs[st.app_id].pop(name, None)
+        self.batch_ops += len(holders)
+
+    def _apply_grant(self, st: SwarmState, h: int, i: int) -> None:
+        """Holder row h unchokes leecher row i: zero-latency stand-in for
+        the INTERESTED -> UNCHOKE exchange.  Queued endgame requests are
+        served immediately, exactly as the scalar `_unchoke` does."""
+        st.unchoked[h, i] = True
+        app_id = st.app_id
+        name_i, name_h = st.names[i], st.names[h]
+        px_h, px_i = st.clients[h], st.clients[i]
+        if px_h is not None:
+            px_h.unchoked[app_id].add(name_i)
+            queued = px_h.queued_reqs[app_id].pop(name_i, None)
+            if queued:
+                for piece_id in sorted(queued):
+                    px_h._serve(app_id, name_i, piece_id)
+        if px_i is not None:
+            px_i.unchoked_by[app_id].add(name_h)
+        st.dirty.add(i)
+        self.batch_ops += 1
+        self.coalesced += 2           # INTERESTED + UNCHOKE never sent
+
+    def _apply_choke(self, st: SwarmState, h: int, i: int) -> None:
+        """Holder row h chokes leecher row i; the leecher immediately
+        re-routes solely-pending requests (the scalar `on_choke` body)."""
+        st.unchoked[h, i] = False
+        app_id = st.app_id
+        name_i, name_h = st.names[i], st.names[h]
+        px_h, px_i = st.clients[h], st.clients[i]
+        if px_h is not None:
+            px_h.unchoked[app_id].discard(name_i)
+        if px_i is not None:
+            px_i.unchoked_by[app_id].discard(name_h)
+            pending = px_i.pending.get(app_id)
+            if pending:
+                for piece_id, asked in list(pending.items()):
+                    if name_h in asked and len(asked) == 1:
+                        del asked[name_h]
+                        px_i.peer_load[name_h] = max(
+                            0, px_i.peer_load[name_h] - 1)
+                        del pending[piece_id]
+            st.dirty.add(i)
+        self.batch_ops += 1
+        self.coalesced += 1           # CHOKE never sent
+
+    def grant(self, px, app_id: str, peer: str) -> bool:
+        """Holder-initiated unchoke (the scalar `_maybe_unchoke_now` fast
+        path reacting to a live PIECE_REQ): applied through the arrays.
+        Returns False when either side has no row yet — the caller then
+        falls back to the wire message."""
+        st = self.states.get(app_id)
+        if st is None:
+            return False
+        h = st.row.get(px.node_id)
+        i = st.row.get(peer)
+        if h is None or i is None:
+            return False
+        self._apply_grant(st, h, i)
+        return True
+
+    def choke(self, px, app_id: str, peer: str) -> bool:
+        """Holder-initiated choke, applied through the arrays (the peer
+        re-routes immediately instead of waiting for a CHOKE message)."""
+        st = self.states.get(app_id)
+        if st is None:
+            return False
+        h = st.row.get(px.node_id)
+        i = st.row.get(peer)
+        if h is None or i is None:
+            return False
+        self._apply_choke(st, h, i)
+        return True
+
+    def _grants(self, st: SwarmState) -> None:
+        """Fill free upload slots with the lowest-named fetching leechers
+        (batched `_maybe_unchoke_now`)."""
+        n = st.n
+        cand = st.fetching[:n] & st.alive[:n]
+        if not cand.any():
+            return
+        holders = st.holder_mask()
+        slots = max(int(self._cfg.upload_slots), 1)
+        used = st.unchoked[:n, :n].sum(axis=1)
+        rows = holders & (used < slots)
+        if not rows.any():
+            return
+        want = cand[None, :] & ~st.unchoked[:n, :n] & rows[:, None]
+        np.fill_diagonal(want, False)
+        ranks = st.ranks
+        for h in np.nonzero(want.any(axis=1))[0]:
+            free = slots - int(used[h])
+            if free <= 0:
+                continue
+            cs = np.nonzero(want[h])[0]
+            for i in cs[np.argsort(ranks[cs], kind="stable")][:free]:
+                self._apply_grant(st, h, int(i))
+
+    def _rechoke(self, st: SwarmState, now: float) -> None:
+        """Batched periodic rechoke: one `choke_order` kernel call ranks
+        every holder's candidates by reciprocal rate; the optimistic slot
+        rotates through the name-ordered rest via the scalar index
+        arithmetic (`rest[self._opt_idx % len(rest)]`)."""
+        st.rechoke_round += 1
+        every = max(int(getattr(self._cfg, "optimistic_every", 3)), 1)
+        rotate = st.rechoke_round % every == 0
+        n = st.n
+        slots = max(int(self._cfg.upload_slots), 1)
+        cand = st.fetching[:n] & st.alive[:n]
+        holders = np.nonzero(st.holder_mask())[0]
+        ranks = st.ranks
+        # fetching rows in name order: the scalar `rest = sorted(cands)`
+        glist = np.nonzero(cand)[0]
+        glist = glist[np.argsort(ranks[glist], kind="stable")]
+        pos = np.full(n, -1, dtype=np.int64)
+        pos[glist] = np.arange(glist.size)
+        n_cand = int(cand.sum())
+        ranked = np.array([h for h in holders
+                           if n_cand - int(cand[h]) > slots], dtype=np.int64)
+        order = None
+        if ranked.size:
+            cm = np.repeat(cand[None, :], ranked.size, axis=0)
+            cm[np.arange(ranked.size), ranked] = False
+            order = choke_order(
+                st.recv[ranked][:, :n] + st.recv_prev[ranked][:, :n],
+                st.sent[ranked][:, :n] + st.sent_prev[ranked][:, :n],
+                cm, ranks[:n], backend=self.backend)
+        krow = {int(h): k for k, h in enumerate(ranked)}
+        for h in holders:
+            h = int(h)
+            k = krow.get(h)
+            if k is None:
+                # few candidates: everyone fetching gets a slot
+                new = {int(i) for i in glist if i != h}
+                st.opt_peer[h] = -1
+            else:
+                top = [int(i) for i in order[k, :slots - 1]]
+                new = set(top)
+                # optimistic slot from the name-ordered rest
+                rest_len = n_cand - int(cand[h]) - (slots - 1)
+                opt = int(st.opt_peer[h])
+                in_rest = (opt >= 0 and opt != h and opt < n
+                           and cand[opt] and opt not in new)
+                if rotate or not in_rest:
+                    st.opt_idx[h] += 1
+                    t = int(st.opt_idx[h]) % rest_len
+                    # rest == glist minus {h} and the top rows: selecting
+                    # rest[t] = the t-th surviving element of glist
+                    excl = sorted(int(pos[x]) for x in top + [h]
+                                  if 0 <= x < n and pos[x] >= 0)
+                    for e in excl:
+                        if e <= t:
+                            t += 1
+                    opt = int(glist[t])
+                st.opt_peer[h] = opt
+                new.add(opt)
+            old = set(np.nonzero(st.unchoked[h, :n])[0].tolist())
+            for i in sorted(old - new, key=lambda x: ranks[x]):
+                self._apply_choke(st, h, int(i))
+            for i in sorted(new - old, key=lambda x: ranks[x]):
+                self._apply_grant(st, h, int(i))
+        # tumble the rate windows so ranking tracks *current* throughput
+        window = float(getattr(self._cfg, "rate_window_s", 20.0))
+        if now - st.win_start >= window:
+            st.recv_prev, st.recv = st.recv, st.recv_prev
+            st.sent_prev, st.sent = st.sent, st.sent_prev
+            st.recv[:, :] = 0.0
+            st.sent[:, :] = 0.0
+            st.win_start = now
+
+    # ========================== piece selection ========================= #
+    def _usable_rows(self, st: SwarmState, i: int) -> np.ndarray:
+        """Holder rows leecher i may address a request to right now:
+        unchoked-by (unless choking is globally off), holding something,
+        alive, not this node, not banned, and with no request of ours
+        already in flight (one in-flight request per holder)."""
+        n = st.n
+        px = st.clients[i]
+        if getattr(self._cfg, "choke", True):
+            ux = st.unchoked[:n, i].copy()
+        else:
+            ux = np.ones(n, dtype=bool)
+        ux &= st.holder_mask()
+        ux[i] = False
+        app_id = st.app_id
+        busy = {peer for asked in px.pending.get(app_id, {}).values()
+                for peer in asked}
+        bad = px.bad_peers.get(app_id)
+        if bad:
+            busy = busy | bad
+        for name in busy:
+            j = st.row.get(name)
+            if j is not None:
+                ux[j] = False
+        return ux
+
+    def _match_row(self, st: SwarmState, i: int, order: np.ndarray,
+                   now: float) -> Tuple[List[Tuple[int, int]], bool]:
+        """Walk one leecher's rarest-first order and pick a holder per
+        piece with the scalar tie-breaks (shunned holders last, then
+        lowest name).  Pure: returns ([(piece, holder_row)], starved)
+        without touching any state."""
+        px = st.clients[i]
+        app_id = st.app_id
+        pending = px.pending.get(app_id, {})
+        budget = int(px.cfg.piece_pipeline) - len(pending)
+        left = st.P - int(st.have_n[i]) - len(pending)
+        out: List[Tuple[int, int]] = []
+        if budget <= 0 or left <= 0:
+            return out, False
+        ux = self._usable_rows(st, i)
+        idx = np.nonzero(ux)[0]
+        if idx.size == 0:
+            return out, True
+        stalled = px.stalled_holders.get(app_id, {})
+        ranks = st.ranks
+        taken = np.zeros(idx.size, dtype=bool)
+        n_missing = st.P - int(st.have_n[i]) - len(pending)
+        for k in range(min(n_missing, order.shape[0])):
+            if budget <= 0:
+                break
+            if taken.all():
+                break
+            p = int(order[k])
+            ok = ~taken & (st.have[idx, p] | st.full[idx])
+            cand = idx[ok]
+            if cand.size == 0:
+                continue
+            key = ranks[cand].astype(np.int64)
+            shun = stalled.get(p)
+            if shun:
+                key = key + np.array(
+                    [st.names[int(j)] in shun for j in cand],
+                    dtype=np.int64) * _RANK_INF
+            j = int(cand[int(np.argmin(key))])
+            out.append((p, j))
+            taken[np.searchsorted(idx, j)] = True
+            budget -= 1
+        starved = budget > 0 and len(out) < n_missing
+        return out, starved
+
+    def _issue(self, st: SwarmState, i: int, piece_id: int, j: int,
+               now: float, endgame: bool = False) -> None:
+        """Commit one request decision: engine dicts + the real PIECE_REQ
+        wire message (link model, faults and chaos still apply to it)."""
+        px = st.clients[i]
+        name_j = st.names[j]
+        asked = px.pending[st.app_id].setdefault(piece_id, {})
+        asked[name_j] = now
+        px.peer_load[name_j] += 1
+        px._send_req(st.app_id, piece_id, name_j, endgame=endgame)
+        self.batch_ops += 1
+
+    def _pump(self, st: SwarmState, now: float) -> None:
+        """Batched pump: one `rarest_orders` kernel call covers every row
+        whose state changed (dirty) plus every previously-starved row if
+        availability moved; then per-row request matching."""
+        n = st.n
+        avail_moved = st.avail_epoch != st.pump_epoch
+        sel = np.zeros(n, dtype=bool)
+        for i in st.dirty:
+            if i < n:
+                sel[i] = True
+        if avail_moved:
+            sel |= st.starved[:n]
+        sel &= st.fetching[:n] & st.alive[:n]
+        st.dirty.clear()
+        st.pump_epoch = st.avail_epoch
+        rows = np.nonzero(sel)[0]
+        if rows.size == 0:
+            return
+        app_id = st.app_id
+        missing = ~st.have[rows, :]
+        for k, i in enumerate(rows):
+            for p in st.clients[int(i)].pending.get(app_id, {}):
+                missing[k, p] = False
+        orders = rarest_orders(missing, st.counts, st.offsets[rows], st.P,
+                               backend=self.backend)
+        for k, i in enumerate(rows):
+            i = int(i)
+            decisions, starved = self._match_row(st, i, orders[k], now)
+            for piece_id, j in decisions:
+                self._issue(st, i, piece_id, j, now)
+            st.starved[i] = starved
+
+    def _endgame(self, st: SwarmState, now: float) -> None:
+        """Batched endgame: rows with real progress whose every missing
+        piece is in flight duplicate the outstanding requests to other
+        holders (scalar `_endgame`: name order, stalled holders shunned,
+        `endgame_dup` cap; choked holders queue, PIECE_CANCEL prunes)."""
+        if not getattr(self._cfg, "endgame", True):
+            return
+        n = st.n
+        app_id = st.app_id
+        rows = np.nonzero(st.fetching[:n] & st.alive[:n]
+                          & (st.have_n[:n] > 0))[0]
+        ranks = st.ranks
+        for i in rows:
+            i = int(i)
+            px = st.clients[i]
+            pending = px.pending.get(app_id)
+            if not pending or st.P - int(st.have_n[i]) != len(pending):
+                continue
+            cap = max(int(getattr(px.cfg, "endgame_dup", 3)), 1)
+            stalled = px.stalled_holders.get(app_id, {})
+            bad = px.bad_peers.get(app_id, ())
+            for piece_id, asked in list(pending.items()):
+                if len(asked) >= cap:
+                    continue
+                shun = stalled.get(piece_id, ())
+                hm = (st.have[:n, piece_id] | st.full[:n]) & st.alive[:n]
+                hm[i] = False
+                cand = np.nonzero(hm)[0]
+                for j in cand[np.argsort(ranks[cand], kind="stable")]:
+                    name = st.names[int(j)]
+                    if name in asked or name in shun or name in bad:
+                        continue
+                    self._issue(st, i, piece_id, int(j), now, endgame=True)
+                    if len(asked) >= cap:
+                        break
+
+    # ============================== tick ================================ #
+    def tick(self, now: float) -> None:
+        """One batched decision pass over every registered swarm."""
+        self.ticks += 1
+        for st in self.states.values():
+            if st.n == 0:
+                continue
+            for i in st.newly_full:
+                self._release_slots(st, i)
+            st.newly_full.clear()
+            if self._cfg is not None and getattr(self._cfg, "choke", True):
+                self._grants(st)
+                interval = float(
+                    getattr(self._cfg, "rechoke_interval_s", 10.0))
+                if now - st.last_rechoke >= interval:
+                    st.last_rechoke = now
+                    self._rechoke(st, now)
+            self._pump(st, now)
+            self._endgame(st, now)
+
+    # ====================== queries / test bridges ====================== #
+    def stats(self) -> Dict[str, int]:
+        return {"ticks": self.ticks, "batch_ops": self.batch_ops,
+                "coalesced_events": self.coalesced}
+
+    def decide_requests(self, app_id: str, node_id: str,
+                        now: float) -> List[Tuple[int, str]]:
+        """Pure query: the (piece, holder) requests the batched engine
+        would issue for one node right now — the differential tests'
+        bridge to the scalar `pump`."""
+        st = self.states[app_id]
+        i = st.row[node_id]
+        px = st.clients[i]
+        missing = ~st.have[i, :]       # invert copies; safe to edit
+        for p in px.pending.get(app_id, {}):
+            missing[p] = False
+        order = rarest_orders(missing[None, :], st.counts,
+                              st.offsets[i:i + 1], st.P,
+                              backend=self.backend)[0]
+        decisions, _ = self._match_row(st, i, order, now)
+        return [(p, st.names[j]) for p, j in decisions]
+
+    def decide_endgame(self, app_id: str, node_id: str,
+                       now: float) -> List[Tuple[int, str]]:
+        """Pure query: the endgame duplicates the batched engine would
+        issue for one node (scalar `_endgame` bridge)."""
+        st = self.states[app_id]
+        i = st.row[node_id]
+        px = st.clients[i]
+        pending = px.pending.get(app_id, {})
+        if not pending or not int(st.have_n[i]):
+            return []
+        if st.P - int(st.have_n[i]) != len(pending):
+            return []
+        n = st.n
+        cap = max(int(getattr(px.cfg, "endgame_dup", 3)), 1)
+        stalled = px.stalled_holders.get(app_id, {})
+        bad = px.bad_peers.get(app_id, ())
+        ranks = st.ranks
+        out: List[Tuple[int, str]] = []
+        for piece_id, asked in pending.items():
+            room = cap - len(asked)
+            if room <= 0:
+                continue
+            shun = stalled.get(piece_id, ())
+            hm = (st.have[:n, piece_id] | st.full[:n]) & st.alive[:n]
+            hm[i] = False
+            cand = np.nonzero(hm)[0]
+            for j in cand[np.argsort(ranks[cand], kind="stable")]:
+                name = st.names[int(j)]
+                if name in asked or name in shun or name in bad:
+                    continue
+                out.append((piece_id, name))
+                room -= 1
+                if room <= 0:
+                    break
+        return out
+
+    @classmethod
+    def mirror_scalar(cls, px, app_id: str,
+                      backend: Optional[str] = None) -> "SwarmHub":
+        """Build a hub whose arrays mirror a *scalar-mode* engine's view
+        of one swarm (peer masks, full seeders, choke view) — used by
+        the differential tests to compare decisions on identical
+        information sets."""
+        hub = cls(backend=backend)
+        manifest = px.manifests[app_id]
+        hub.register_leech(px, app_id, manifest)
+        st = hub.states[app_id]
+        me = st.row[px.node_id]
+        inv = px.inventories.get(app_id)
+        if inv is not None:
+            for p in inv.have:
+                hub.note_have(px, app_id, p)
+        full_mask = manifest.full_mask
+        for peer, mask in px.peer_masks.get(app_id, {}).items():
+            if peer == px.node_id:
+                continue
+            j = st.ensure_row(peer)
+            mask &= full_mask
+            while mask:
+                low = mask & -mask
+                p = low.bit_length() - 1
+                mask ^= low
+                st.have[j, p] = True
+                st.have_n[j] += 1
+                st.counts[p] += 1
+        for peer in px.full_seeders.get(app_id, ()):
+            st.full[st.ensure_row(peer)] = True
+        for holder in px.unchoked_by.get(app_id, ()):
+            st.unchoked[st.ensure_row(holder), me] = True
+        return hub

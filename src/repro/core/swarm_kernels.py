@@ -1,0 +1,248 @@
+"""Batched swarm decision kernels: rarest-first scoring and choke ranking
+for ALL nodes in one vectorized pass (ROADMAP: "N=2000+ flash crowds via
+batched, array-native simulation").
+
+The scalar `PieceExchange` engine makes every decision one Python call at
+a time: `rarest_first_order_np` sorts one node's missing pieces, and
+`_rechoke_app` ranks one holder's candidates.  At N=2000 those calls —
+not the protocol — dominate the simulation wall-clock.  This module
+computes the same decisions for a whole swarm as array programs over the
+`SwarmState` layout (core/swarm_arrays.py):
+
+  * `rarest_keys` / `rarest_orders`  — per-(node, piece) composite sort
+    keys reproducing `rarest_first_order_np`'s lexsort order
+    ``(counts, (p + offset) % n, p)`` exactly, argsorted per row;
+  * `choke_order` — per-holder candidate ranking reproducing
+    `_rechoke_app`'s ``sorted(cands, key=(-rate_from, -rate_to, name))``
+    via a chain of stable argsorts.
+
+Three interchangeable backends hide behind the same API, mirroring the
+repo's kernel discipline (`repro.kernels.ssd.ops`: reference impl +
+differential tests + selectable fast path):
+
+  * ``numpy``  — always available, the default on CPU-only images;
+  * ``jax``    — jitted `jnp` version of the same math;
+  * ``pallas`` — the rarest-first scoring inner loop as a Pallas kernel
+    (interpret mode on CPU, compiled on TPU), argsort staying in XLA.
+
+`set_backend` / the ``REPRO_SWARM_BACKEND`` env var select globally;
+every function also takes an explicit ``backend=``.  Unknown or
+unavailable backends fall back to numpy, so CPU-only CI never needs jax.
+Differential tests (tests/test_swarm_batch.py) assert all backends
+reproduce the scalar decisions bit-for-bit.
+"""
+from __future__ import annotations
+
+import os
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+try:  # CPU-only protocol CI installs no jax; everything degrades to numpy
+    import jax
+    import jax.numpy as jnp
+    _HAVE_JAX = True
+except Exception:  # pragma: no cover - exercised on the no-jax CI image
+    jax = None
+    jnp = None
+    _HAVE_JAX = False
+
+# sentinel key for pieces a row must not request (held, pending, invalid):
+# larger than any real composite key so they argsort to the back
+KEY_INF = np.int64(2 ** 62)
+
+_backend = os.environ.get("REPRO_SWARM_BACKEND", "numpy")
+
+
+def available_backends() -> List[str]:
+    return ["numpy"] + (["jax", "pallas"] if _HAVE_JAX else [])
+
+
+def set_backend(name: str) -> str:
+    """Select the default backend; unavailable ones fall back to numpy."""
+    global _backend
+    _backend = name if name in available_backends() else "numpy"
+    return _backend
+
+
+def get_backend(backend: Optional[str] = None) -> str:
+    b = backend if backend is not None else _backend
+    return b if b in available_backends() else "numpy"
+
+
+# ====================== rarest-first scoring ============================ #
+# The scalar order (swarm.rarest_first_order_np) is
+#     np.lexsort((m, (m + offset) % n, counts[m]))
+# i.e. sort missing piece ids by (availability, rotated id, raw id).  With
+# counts < COUNT_CAP and piece ids < n the three keys pack losslessly into
+# one int64:  key = (counts * n + rot) * n + p  — one argsort per row then
+# reproduces the lexsort order for ALL rows at once.
+
+def rarest_keys_np(counts: np.ndarray, offsets: np.ndarray,
+                   n_pieces: int) -> np.ndarray:
+    """(R, P) int64 composite keys; rows are nodes, columns pieces."""
+    n = max(int(n_pieces), 1)
+    p = np.arange(n, dtype=np.int64)
+    rot = (p[None, :] + np.asarray(offsets, dtype=np.int64)[:, None]) % n
+    return (counts.astype(np.int64)[None, :] * n + rot) * n + p[None, :]
+
+
+if _HAVE_JAX:
+    from functools import partial
+
+    @partial(jax.jit, static_argnames=("n_pieces", "impl", "interpret"))
+    def _rarest_keys_jax(counts, offsets, n_pieces: int,
+                         impl: str = "jnp", interpret: bool = True):
+        # int32 throughout (jax runs without x64 here): the composite key
+        # needs counts * n^2 < 2^31, which holds for every simulated
+        # swarm (counts <= N; see _rarest_keys_pallas)
+        if impl == "pallas":
+            return _rarest_keys_pallas(counts, offsets, n_pieces,
+                                       interpret=interpret)
+        n = max(int(n_pieces), 1)
+        p = jnp.arange(n, dtype=jnp.int32)
+        rot = (p[None, :] + offsets.astype(jnp.int32)[:, None]) % n
+        return (counts.astype(jnp.int32)[None, :] * n + rot) * n + p[None, :]
+
+    def _rarest_keys_pallas(counts, offsets, n_pieces: int,
+                            interpret: bool = True):
+        """Pallas scoring kernel: the fused multiply-add + rotated-modulo
+        inner loop of the rarest-first key computation, one grid row per
+        node block.  int32 on-chip (TPU-native); the (counts * n * n)
+        product must stay below 2^31, which holds for every simulated
+        swarm (counts <= N, N * P^2 < 2^31 up to N=2000, P=1024)."""
+        import jax.experimental.pallas as pl
+
+        n = max(int(n_pieces), 1)
+        rows = offsets.shape[0]
+
+        def kernel(counts_ref, off_ref, out_ref):
+            c = counts_ref[...].astype(jnp.int32)            # (1, n)
+            off = off_ref[...].astype(jnp.int32)             # (1, 1)
+            p = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
+            rot = jax.lax.rem(p + off, jnp.int32(n))
+            out_ref[...] = (c * n + rot) * n + p
+
+        return pl.pallas_call(
+            kernel,
+            grid=(rows,),
+            in_specs=[
+                pl.BlockSpec((1, n), lambda i: (0, 0)),
+                pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((rows, n), jnp.int32),
+            interpret=interpret,
+        )(counts.astype(jnp.int32)[None, :],
+          offsets.astype(jnp.int32)[:, None])
+
+
+def rarest_keys(counts: np.ndarray, offsets: np.ndarray, n_pieces: int,
+                backend: Optional[str] = None) -> np.ndarray:
+    """Composite rarest-first sort keys for many nodes at once.
+
+    ``counts``  — (P,) availability counts (partial holders; a uniform
+                  full-seeder constant cannot change the order);
+    ``offsets`` — (R,) per-node tie-break rotations (the scalar engine's
+                  ``sum(ord(c) for c in node_id + app_id)``).
+    Returns (R, P) int64 keys; ``argsort(keys[r])`` is exactly
+    ``rarest_first_order_np(range(P), counts, offsets[r], P)``.
+    """
+    b = get_backend(backend)
+    if b == "numpy":
+        return rarest_keys_np(counts, offsets, n_pieces)
+    impl = "pallas" if b == "pallas" else "jnp"
+    out = _rarest_keys_jax(jnp.asarray(np.asarray(counts)),
+                           jnp.asarray(np.asarray(offsets)),
+                           int(n_pieces), impl=impl)
+    return np.asarray(out, dtype=np.int64)
+
+
+def rarest_orders(missing: np.ndarray, counts: np.ndarray,
+                  offsets: np.ndarray, n_pieces: int,
+                  backend: Optional[str] = None) -> np.ndarray:
+    """Batched `rarest_first_order_np`: full piece order per node.
+
+    ``missing`` is (R, P) bool — True where the node may request the
+    piece.  Returns (R, P) int32 piece ids; row r's first
+    ``missing[r].sum()`` entries are that node's missing pieces in
+    rarest-first order (non-missing pieces sort to the back via KEY_INF).
+    """
+    keys = rarest_keys(counts, offsets, n_pieces, backend=backend)
+    keys = np.where(np.asarray(missing, dtype=bool), keys, KEY_INF)
+    return np.argsort(keys, axis=1, kind="stable").astype(np.int32)
+
+
+# ========================= choke ranking ================================ #
+def choke_order_np(recv: np.ndarray, sent: np.ndarray, cand: np.ndarray,
+                   ranks: np.ndarray) -> np.ndarray:
+    """Rank every holder's unchoke candidates in one pass.
+
+    Reproduces `_rechoke_app`'s ``sorted(cands, key=lambda p:
+    (-rate_from[p], -rate_to[p], p))`` for all holders at once via a
+    chain of stable argsorts (last key applied last is primary).
+    ``ranks`` maps column -> lexicographic rank of the node name, which
+    is what the scalar string tie-break sorts by.  Non-candidate columns
+    are pushed to the back.  Returns (H, C) int32 column indices.
+    """
+    cand = np.asarray(cand, dtype=bool)
+    # non-candidates must lose every comparison: real rates are >= 0
+    r1 = np.where(cand, recv, -1.0)
+    r2 = np.where(cand, sent, -1.0)
+    nm = np.where(cand, ranks[None, :], ranks.max() + 1 if ranks.size
+                  else 1).astype(np.int64)
+    # stable multi-key sort: name (tie-break), then -sent, then -recv
+    order = np.argsort(nm, axis=1, kind="stable")
+    for key in (-r2, -r1):
+        k = np.take_along_axis(key, order, axis=1)
+        order = np.take_along_axis(order,
+                                   np.argsort(k, axis=1, kind="stable"),
+                                   axis=1)
+    return order.astype(np.int32)
+
+
+if _HAVE_JAX:
+    @jax.jit
+    def _choke_order_jax(recv, sent, cand, ranks):
+        r1 = jnp.where(cand, recv, -1.0)
+        r2 = jnp.where(cand, sent, -1.0)
+        maxr = jnp.max(ranks) + 1 if ranks.size else 1
+        nm = jnp.where(cand, ranks[None, :], maxr).astype(jnp.int32)
+        order = jnp.argsort(nm, axis=1, stable=True)
+        for key in (-r2, -r1):
+            k = jnp.take_along_axis(key, order, axis=1)
+            order = jnp.take_along_axis(
+                order, jnp.argsort(k, axis=1, stable=True), axis=1)
+        return order.astype(jnp.int32)
+
+
+def choke_order(recv: np.ndarray, sent: np.ndarray, cand: np.ndarray,
+                ranks: np.ndarray,
+                backend: Optional[str] = None) -> np.ndarray:
+    b = get_backend(backend)
+    if b == "numpy":
+        return choke_order_np(recv, sent, cand, ranks)
+    # the pallas backend shares the jax ranking path: the scoring kernel
+    # only covers the rarest-first inner loop, where it wins
+    out = _choke_order_jax(jnp.asarray(np.asarray(recv, dtype=np.float32)),
+                           jnp.asarray(np.asarray(sent, dtype=np.float32)),
+                           jnp.asarray(np.asarray(cand, dtype=bool)),
+                           jnp.asarray(np.asarray(ranks, dtype=np.int32)))
+    return np.asarray(out, dtype=np.int32)
+
+
+# ===================== scalar-compatible wrappers ======================= #
+def rarest_order_single(missing: Sequence[int], counts: np.ndarray,
+                        offset: int, n_pieces: int,
+                        backend: Optional[str] = None) -> List[int]:
+    """One-node convenience wrapper with `rarest_first_order_np`'s exact
+    signature semantics — the differential tests' bridge between the
+    scalar engine and the batched kernels."""
+    m = np.zeros(n_pieces, dtype=bool)
+    idx = np.asarray(list(missing), dtype=np.int64)
+    if idx.size == 0:
+        return []
+    m[idx] = True
+    order = rarest_orders(m[None, :], np.asarray(counts),
+                          np.asarray([offset]), n_pieces, backend=backend)
+    return order[0, : idx.size].tolist()

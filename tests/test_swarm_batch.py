@@ -1,0 +1,246 @@
+"""Array-native batched swarm engine (core/swarm_arrays + swarm_kernels):
+kernel differentials against the scalar PieceExchange, request-for-request
+trace equivalence via SwarmHub.mirror_scalar, mixed-mode event-heap
+determinism (run vs run_batched), batched flash-crowd smoke, and the chaos
+overlay on the batched path."""
+import random
+
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.protocol
+
+from repro.core import (Agent, AgentConfig, LinkModel, Msg, PieceManifest,
+                        SimRuntime, SwarmHub, TrackerConfig, TrackerServer,
+                        make_prime_app, rarest_first_order_np)
+from repro.core import swarm_kernels as sk
+from repro.core.messages import HAVE, PIECE_REQ, UNCHOKE
+from tests.test_exchange_scaling import _engine
+
+
+# ===================== kernel differentials ============================= #
+def test_rarest_orders_matches_scalar_per_row():
+    """Batched rarest-first keys reproduce `rarest_first_order_np` (itself
+    differentially tied to the scalar `rarest_first_order`) row by row
+    over randomized counts / missing sets / tie-break offsets."""
+    rng = random.Random(11)
+    for _ in range(40):
+        n_pieces = rng.randrange(1, 100)
+        n_rows = rng.randrange(1, 12)
+        counts = np.array([rng.randrange(0, 7) for _ in range(n_pieces)],
+                          dtype=np.int32)
+        missing = np.zeros((n_rows, n_pieces), dtype=bool)
+        offsets = np.zeros(n_rows, dtype=np.int64)
+        for r in range(n_rows):
+            missing[r, rng.sample(range(n_pieces),
+                                  rng.randrange(0, n_pieces + 1))] = True
+            offsets[r] = rng.randrange(0, 900)
+        orders = sk.rarest_orders(missing, counts, offsets, n_pieces)
+        assert orders.shape == (n_rows, n_pieces)
+        for r in range(n_rows):
+            k = int(missing[r].sum())
+            want = rarest_first_order_np(
+                sorted(np.nonzero(missing[r])[0].tolist()), counts,
+                offset=int(offsets[r]), n_pieces=n_pieces)
+            assert orders[r, :k].tolist() == want, f"row {r}"
+
+
+def test_choke_order_matches_scalar_ranking():
+    """Batched choke ranking reproduces `_rechoke_app`'s
+    sorted(key=(-rate_from, -rate_to, name)) for every holder at once,
+    including rate ties broken by the lexicographic name."""
+    rng = random.Random(5)
+    rates = [0.0, 0.0, 1.5, 7.25, 7.25, 100.0]
+    for _ in range(40):
+        n_cols = rng.randrange(1, 20)
+        n_holders = rng.randrange(1, 10)
+        names = sorted(f"N{rng.randrange(1000):03d}-{i}"
+                       for i in range(n_cols))
+        ranks = np.arange(n_cols, dtype=np.int64)
+        recv = np.array([[rng.choice(rates) for _ in range(n_cols)]
+                         for _ in range(n_holders)], dtype=np.float32)
+        sent = np.array([[rng.choice(rates) for _ in range(n_cols)]
+                         for _ in range(n_holders)], dtype=np.float32)
+        cand = np.array([[rng.random() < 0.6 for _ in range(n_cols)]
+                         for _ in range(n_holders)], dtype=bool)
+        order = sk.choke_order_np(recv, sent, cand, ranks)
+        for h in range(n_holders):
+            cs = [j for j in range(n_cols) if cand[h, j]]
+            want = sorted(cs, key=lambda j: (-recv[h, j], -sent[h, j],
+                                             names[j]))
+            got = order[h, :len(cs)].tolist()
+            assert got == want, f"holder {h}"
+
+
+@pytest.mark.jax_slow
+def test_kernel_backends_agree_with_numpy():
+    """jax (and pallas, when present) backends produce bit-identical
+    rarest orders and choke rankings to the numpy reference."""
+    backends = [b for b in sk.available_backends() if b != "numpy"]
+    if not backends:
+        pytest.skip("no jax backends available")
+    rng = random.Random(31)
+    for _ in range(10):
+        n_pieces = rng.randrange(1, 300)
+        n_rows = rng.randrange(1, 20)
+        counts = np.array([rng.randrange(0, 9) for _ in range(n_pieces)],
+                          dtype=np.int32)
+        missing = np.array([[rng.random() < 0.5 for _ in range(n_pieces)]
+                            for _ in range(n_rows)], dtype=bool)
+        offsets = np.array([rng.randrange(0, 2000)
+                            for _ in range(n_rows)], dtype=np.int64)
+        ref = sk.rarest_orders(missing, counts, offsets, n_pieces,
+                               backend="numpy")
+        for b in backends:
+            got = sk.rarest_orders(missing, counts, offsets, n_pieces,
+                                   backend=b)
+            assert got.tolist() == ref.tolist(), b
+        recv = np.array([[rng.choice([0.0, 3.5, 9.0])
+                          for _ in range(n_rows)]
+                         for _ in range(n_rows)], dtype=np.float32)
+        sent = recv.T.copy()
+        cand = np.array([[rng.random() < 0.5 for _ in range(n_rows)]
+                         for _ in range(n_rows)], dtype=bool)
+        ranks = np.arange(n_rows, dtype=np.int64)
+        cref = sk.choke_order_np(recv, sent, cand, ranks)
+        for b in backends:
+            got = sk.choke_order(recv, sent, cand, ranks, backend=b)
+            assert got.tolist() == cref.tolist(), b
+
+
+# ============== trace differential: hub vs scalar pump ================== #
+def test_batched_requests_match_scalar_over_seeded_trace():
+    """320-event seeded trace: after every event, a hub mirroring the
+    scalar engine's exact information set must predict the scalar pump's
+    PIECE_REQ decisions request-for-request (piece, holder, order), and
+    its endgame bridge must predict the scalar endgame duplicates."""
+    n_pieces = 64
+    manifest = PieceManifest.synthetic("a", n_pieces * 1000, 1000)
+    px, log = _engine(piece_pipeline=6)
+    rng = random.Random(97)
+    peers = [f"P{i}" for i in range(16)]
+    px.join("a", manifest)
+    px.note_full_seeders("a", set(peers[:2]))
+    compared = 0
+    for step in range(320):
+        # apply the event with pump disabled so the mirror sees the
+        # pre-decision state the scalar engine is about to act on
+        orig_pump, px.pump = px.pump, lambda app_id: None
+        roll = rng.random()
+        if roll < 0.5:
+            px.on_have(Msg(HAVE, rng.choice(peers),
+                           {"app_id": "a",
+                            "mask": rng.getrandbits(n_pieces)}))
+        elif roll < 0.8:
+            px.on_unchoke(Msg(UNCHOKE, rng.choice(peers), {"app_id": "a"}))
+        else:
+            px.on_peer_gone(rng.choice(peers))
+        px.pump = orig_pump
+        hub = SwarmHub.mirror_scalar(px, "a")
+        want = hub.decide_requests("a", "L", now=0.0)
+        want_eg = hub.decide_endgame("a", "L", now=0.0)
+        n0 = len(log)
+        px.pump("a")
+        got = [(m.payload["piece_id"], d) for d, m in log[n0:]
+               if m.kind == PIECE_REQ and not m.payload.get("endgame")]
+        got_eg = [(m.payload["piece_id"], d) for d, m in log[n0:]
+                  if m.kind == PIECE_REQ and m.payload.get("endgame")]
+        assert got == want, f"step {step}"
+        assert got_eg == want_eg, f"step {step} (endgame)"
+        compared += len(got)
+    assert compared > 10          # the trace actually exercised matching
+
+
+# ================= mixed-mode event-heap determinism ==================== #
+def _mini_flash(n_leechers=4):
+    rt = SimRuntime(link=LinkModel(uplink_Bps=12.5e6,
+                                   downlink_Bps=12.5e6))
+    rt.add_node(TrackerServer(config=TrackerConfig(ping_interval_s=2.0)))
+    host = Agent("host", config=AgentConfig(work_timeout_s=600.0))
+    rt.add_node(host)
+    app = make_prime_app("mm-app", "host", 3, 6_000, n_parts=6,
+                         sim_time_per_number=1e-4, swarm=True,
+                         app_bytes=262_144, piece_bytes=32_768)
+    host.host_app(app)
+    leech = [Agent(f"L{i}", config=AgentConfig(work_timeout_s=600.0))
+             for i in range(n_leechers)]
+    for a in leech:
+        rt.add_node(a)
+    done = lambda: all("mm-app" in a.images for a in leech)
+    return rt, host, leech, done
+
+
+def test_run_batched_without_ticks_is_event_identical_to_run():
+    """`run_batched` shares the heap, the monotonic `_seq` counter and
+    `events_processed` with `run`; with no tick callback it must drain
+    the same scenario pop-for-pop: same event count, same sequence
+    watermark, same virtual clock, same per-node traffic."""
+    a_rt, a_host, a_leech, a_done = _mini_flash()
+    b_rt, b_host, b_leech, b_done = _mini_flash()
+    a_rt.run(until=3_600, stop_when=a_done)
+    b_rt.run_batched(until=3_600, stop_when=b_done, tick_s=0.25)
+    assert a_done() and b_done()
+    assert a_rt.events_processed == b_rt.events_processed
+    assert repr(a_rt._seq) == repr(b_rt._seq)   # same push watermark
+    assert a_rt.now() == b_rt.now()
+    assert a_rt.tx_bytes == b_rt.tx_bytes
+    assert a_host.completed_at == b_host.completed_at
+
+
+def test_run_batched_resumes_mixed_with_run():
+    """Mixed-mode regression: a scenario driven part-way by `run`, then
+    finished by `run_batched` (and vice versa) lands in the same final
+    state — the shared seq counter keeps FIFO order across the seam."""
+    final = []
+    for order in ((0, 1), (1, 0)):
+        rt, host, leech, done = _mini_flash()
+        runners = [lambda u: rt.run(until=u, stop_when=done),
+                   lambda u: rt.run_batched(until=u, stop_when=done,
+                                            tick_s=0.5)]
+        runners[order[0]](1.5)
+        assert not done()
+        runners[order[1]](3_600)
+        assert done()
+        final.append((rt.events_processed, repr(rt._seq), rt.now(),
+                      dict(rt.tx_bytes)))
+    assert final[0] == final[1]
+
+
+# ==================== batched end-to-end scenarios ====================== #
+def test_scenario_vii_batched_smoke():
+    """Small batched flash crowd completes and fully replicates; the hub
+    actually carried the decisions (batch_ops) and coalesced the control
+    plane (logical > heap events)."""
+    from benchmarks.paper_tables import scenario_vii
+    res = scenario_vii(verbose=False, n_volunteers=8, image_mb=4.0,
+                       n_pieces=8, batched=True)
+    assert res["done"] and res["replicated"] and res["replicas"] == 8
+    assert res["batch_ops"] > 0
+    assert res["logical_events"] > res["events"] > 0
+    assert res["full_replication_s"] >= res["makespan_s"] > 0
+    assert res["backend"] in sk.available_backends()
+
+
+def test_chaos_overlay_on_batched_path():
+    """Seeded FaultPlan over the batched engine: loss / dup / jitter /
+    churn / a partition, with the PR-4 convergence, quorum and
+    hub-consistency invariants asserted by check_invariants()."""
+    from repro.core.chaos import ChaosScenario
+    sc = ChaosScenario(seed=3, n_volunteers=8, n_pieces=12, n_parts=16,
+                       image_bytes=96_000, real_image=False,
+                       batched=True).run()
+    sc.check_invariants()
+    rep = sc.report()
+    assert rep["replicated"] and rep["done"]
+    assert rep["batch_ops"] > 0
+
+
+@pytest.mark.jax_slow
+def test_scenario_vii_batched_large_n_converges():
+    """N=500 batched flash crowd (the CI sweep ceiling) fully replicates
+    and clearly outruns the per-message path's historical event rate."""
+    from benchmarks.paper_tables import scenario_vii
+    res = scenario_vii(verbose=False, n_volunteers=500, batched=True)
+    assert res["done"] and res["replicated"] and res["replicas"] == 500
+    assert res["wall_s"] < 120
+    assert res["events_per_sec"] > 500_000
