@@ -7,7 +7,10 @@ meaningfully slower:
   * logical events/s at any swept N dropped more than --evps-drop
     (default 20%), or
   * a Scenario VII makespan / full-replication time regressed more than
-    --makespan-drift (default 10%).
+    --makespan-drift (default 10%), or
+  * a row's cross-ISP bytes grew more than --cross-isp-drift (default
+    10%) or its p99 node-completion time drifted past --makespan-drift
+    (the Scenario IX P4P economics; virtual-time, machine-independent).
 
 Only rows present in BOTH files are compared (a CI smoke sweep that
 stops at N=500 is judged against the matching baseline rows only), so
@@ -29,7 +32,8 @@ def _rows(path: str) -> dict:
 
 
 def check(baseline_path: str, current_path: str, evps_drop: float = 0.20,
-          makespan_drift: float = 0.10, verbose: bool = True) -> list:
+          makespan_drift: float = 0.10, cross_isp_drift: float = 0.10,
+          verbose: bool = True) -> list:
     base, cur = _rows(baseline_path), _rows(current_path)
     failures = []
     shared = sorted(set(base) & set(cur))
@@ -38,7 +42,9 @@ def check(baseline_path: str, current_path: str, evps_drop: float = 0.20,
         for key, limit, higher_is_better in (
                 ("events_per_sec", evps_drop, True),
                 ("makespan_s", makespan_drift, False),
-                ("full_replication_s", makespan_drift, False)):
+                ("full_replication_s", makespan_drift, False),
+                ("p99_completion_s", makespan_drift, False),
+                ("cross_isp_bytes", cross_isp_drift, False)):
             if key not in b or key not in c:
                 continue
             bv, cv = float(b[key]), float(c[key])
@@ -74,10 +80,13 @@ def main(argv=None) -> int:
                     help="max fractional events/s drop per row")
     ap.add_argument("--makespan-drift", type=float, default=0.10,
                     help="max fractional makespan/replication increase")
+    ap.add_argument("--cross-isp-drift", type=float, default=0.10,
+                    help="max fractional cross-ISP bytes increase")
     args = ap.parse_args(argv)
     failures = check(args.baseline, args.current,
                      evps_drop=args.evps_drop,
-                     makespan_drift=args.makespan_drift)
+                     makespan_drift=args.makespan_drift,
+                     cross_isp_drift=args.cross_isp_drift)
     if failures:
         for name, key, bv, cv in failures:
             print(f"[guard] REGRESSION {name}.{key}: {bv} -> {cv}",

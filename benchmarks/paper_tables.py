@@ -455,6 +455,13 @@ def scenario_vii(verbose: bool = True, n_volunteers: int = 200,
     coalesced = hub.coalesced if hub is not None else 0
     logical = events + coalesced
     replicas = sum(1 for a in agents[1:] if "appvii" in a.images)
+    # p99 of the per-node image-completion distribution (stragglers that
+    # never finished count as run end); cross_isp_bytes is 0 on this flat
+    # scenario but keeps the row schema aligned with Scenario IX
+    times = sorted(a.image_completed_at.get("appvii", rt.now())
+                   for a in agents[1:])
+    p99 = times[min(int(0.99 * (len(times) - 1)), len(times) - 1)] \
+        if times else 0.0
     res = {
         "n_volunteers": n_volunteers,
         "image_mb": image_mb,
@@ -462,6 +469,8 @@ def scenario_vii(verbose: bool = True, n_volunteers: int = 200,
         "done": "appvii" in host.completed_at,
         "makespan_s": work_done_s,
         "full_replication_s": rt.now(),
+        "p99_completion_s": p99,
+        "cross_isp_bytes": rt.cross_isp_bytes,
         "replicated": replicas == n_volunteers,
         "origin_up_mb": rt.tx_bytes.get("host", 0) / 1e6,
         "replicas": replicas,
@@ -550,10 +559,146 @@ def scenario_viii(verbose: bool = True, n_volunteers: int = 48,
     return res
 
 
+def scenario_ix(verbose: bool = True, n_volunteers: int = 500,
+                n_islands: int = 8, image_mb: float = 32.0,
+                n_pieces: int = 64, n_parts: Optional[int] = None,
+                m_min: int = 1, uplink_mbps: float = 100.0,
+                until_h: float = 8.0, tick_s: float = 0.5,
+                seed: int = 9, trunk_Bps: Optional[float] = None,
+                backend: Optional[str] = None) -> dict:
+    """Scenario IX: topology-aware (P4P) peer selection on a WAN.
+
+    Fixed total demand — the Scenario VII flash crowd, N volunteers
+    spread round-robin across `n_islands` ISP islands with seeded
+    inter-island latencies — run twice on the *identical* topology:
+
+      * ``naive`` — rarity-only selection: the WAN is there (every
+        cross-island message pays the latency, every cross-island byte is
+        counted) but peers ignore it, the pre-ISSUE-7 behaviour;
+      * ``p4p``   — the tracker serves its ALTO COST_MAP and the batched
+        engine folds the cost plane into piece and holder selection
+        (same-island holders first, rarity within a cost class).
+
+    Headline metrics: **cross-ISP bytes** (the economics BOINC-scale
+    swarms actually pay for) and **p99 node-completion time** (WAN tail
+    latency).  Target: >=5x cross-ISP cut with <=5% work-makespan
+    regression.  Rows land in BENCH_swarm.json, guarded by bench_guard.
+    """
+    import time as _time
+
+    from repro.core.runtime import LinkModel
+    from repro.core.swarm_arrays import SwarmHub
+    from repro.core.topology import Topology
+
+    if n_parts is None:
+        n_parts = 2 * n_volunteers
+    image_bytes = int(image_mb * 1e6)
+    link_Bps = uplink_mbps * 1e6 / 8
+    app_id = "appix"
+    vol_ids = [f"V{i:03d}" for i in range(n_volunteers)]
+
+    def _one(p4p: bool) -> dict:
+        topo = Topology.make(["host"] + vol_ids, n_islands, seed=seed,
+                             trunk_Bps=trunk_Bps)
+        rt = SimRuntime(link=LinkModel(uplink_Bps=link_Bps,
+                                       downlink_Bps=link_Bps),
+                        topology=topo)
+        rt.add_node(TrackerServer(
+            config=TrackerConfig(ping_interval_s=5.0),
+            topology=topo if p4p else None))
+        hub = SwarmHub(backend=backend)
+        rt.crash_hooks.append(hub.node_gone)
+        if p4p:
+            hub.set_topology(topo)
+        cfg = dict(work_timeout_s=600.0, status_interval_s=5.0,
+                   rechoke_interval_s=5.0, max_replica_seeders=8)
+        host = Agent("host", config=AgentConfig(**cfg), hub=hub)
+        rt.add_node(host)
+        app = make_prime_app(app_id, "host", 3, 48_000, n_parts=n_parts,
+                             sim_time_per_number=2e-3, m_min=m_min,
+                             swarm=True, app_bytes=image_bytes,
+                             piece_bytes=image_bytes // n_pieces)
+        host.host_app(app)
+        agents = []
+        for i, nid in enumerate(vol_ids):
+            a = Agent(nid, config=AgentConfig(**cfg), hub=hub)
+            rt.add_node(a, speed=1.0 - 0.4 * i / max(n_volunteers, 1))
+            agents.append(a)
+        t0 = _time.perf_counter()
+        rt.run_batched(until=until_h * H,
+                       stop_when=lambda: app_id in host.completed_at,
+                       tick_s=tick_s, on_tick=hub.tick)
+        work_done_s = rt.now()
+        not_done = list(agents)
+
+        def all_replicated():
+            not_done[:] = [a for a in not_done if app_id not in a.images]
+            return not not_done
+
+        rt.run_batched(until=until_h * H, stop_when=all_replicated,
+                       tick_s=tick_s, on_tick=hub.tick)
+        wall_s = max(_time.perf_counter() - t0, 1e-9)
+        # per-node completion distribution: the sim time each volunteer
+        # verified the full image; stragglers count as run end
+        times = sorted(a.image_completed_at.get(app_id, rt.now())
+                       for a in agents)
+        p99 = times[min(int(0.99 * (len(times) - 1)), len(times) - 1)]
+        replicas = sum(1 for a in agents if app_id in a.images)
+        logical = rt.events_processed + hub.coalesced
+        return {
+            "mode": "p4p" if p4p else "naive",
+            "done": app_id in host.completed_at,
+            "replicated": replicas == n_volunteers,
+            "replicas": replicas,
+            "makespan_s": work_done_s,
+            "full_replication_s": rt.now(),
+            "p99_completion_s": p99,
+            "cross_isp_bytes": rt.cross_isp_bytes,
+            "origin_up_mb": rt.tx_bytes.get("host", 0) / 1e6,
+            "events": rt.events_processed,
+            "logical_events": logical,
+            "events_per_sec": logical / wall_s,
+            "wall_s": wall_s,
+            "backend": hub.backend,
+        }
+
+    naive = _one(p4p=False)
+    p4p = _one(p4p=True)
+    res = {
+        "n_volunteers": n_volunteers,
+        "n_islands": n_islands,
+        "image_mb": image_mb,
+        "seed": seed,
+        "naive": naive,
+        "p4p": p4p,
+        "cross_isp_reduction": naive["cross_isp_bytes"]
+        / max(p4p["cross_isp_bytes"], 1),
+        "makespan_ratio": p4p["makespan_s"]
+        / max(naive["makespan_s"], 1e-9),
+        "p99_ratio": p4p["p99_completion_s"]
+        / max(naive["p99_completion_s"], 1e-9),
+        "done": naive["done"] and p4p["done"],
+        "replicated": naive["replicated"] and p4p["replicated"],
+    }
+    if verbose:
+        print(f"[scenarioIX] N={n_volunteers} islands={n_islands} "
+              f"img={image_mb:.0f}MB: cross-ISP "
+              f"{naive['cross_isp_bytes'] / 1e6:.0f} -> "
+              f"{p4p['cross_isp_bytes'] / 1e6:.0f}MB "
+              f"({res['cross_isp_reduction']:.1f}x cut) "
+              f"p99 {naive['p99_completion_s']:.0f} -> "
+              f"{p4p['p99_completion_s']:.0f}s "
+              f"makespan {naive['makespan_s']:.0f} -> "
+              f"{p4p['makespan_s']:.0f}s "
+              f"(x{res['makespan_ratio']:.3f}) "
+              f"replicated={res['replicated']}")
+    return res
+
+
 ALL_TABLES = {"table1": table1, "table2": table2, "table3": table3,
               "table4": table4, "scenario_v": scenario_v,
               "scenario_vi": scenario_vi, "scenario_vii": scenario_vii,
-              "scenario_viii": scenario_viii}
+              "scenario_viii": scenario_viii, "scenario_ix": scenario_ix}
 
 if __name__ == "__main__":
     for name, fn in ALL_TABLES.items():

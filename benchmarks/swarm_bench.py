@@ -124,6 +124,58 @@ def bench_live(verbose: bool = True, n_volunteers: int = 8,
     return rows
 
 
+def bench_scenario_ix(verbose: bool = True, n_volunteers: int = 500,
+                      n_islands: int = 8, image_mb: float = 32.0,
+                      backend=None):
+    """Scenario IX (topology-aware P4P selection) as perf-trajectory
+    rows: the same WAN flash crowd with rarity-only vs cost-aware peer
+    selection, one row per mode so bench_guard tracks the cross-ISP
+    bytes and p99 completion of each independently."""
+    from benchmarks.paper_tables import scenario_ix
+    res = scenario_ix(verbose=False, n_volunteers=n_volunteers,
+                      n_islands=n_islands, image_mb=image_mb,
+                      backend=backend)
+    rows = []
+    for mode in ("naive", "p4p"):
+        m = res[mode]
+        rows.append({
+            "name": f"swarm_scenario_ix_{mode}_n{n_volunteers}"
+                    f"_i{n_islands}",
+            "us_per_call": 0.0,
+            "derived": (f"cross_isp {m['cross_isp_bytes'] / 1e6:.0f}MB "
+                        f"p99 {m['p99_completion_s']:.0f}s makespan "
+                        f"{m['makespan_s']:.0f}s replicas "
+                        f"{m['replicas']}/{n_volunteers} "
+                        f"[{m['backend']}]"),
+            "metrics": {"n_volunteers": n_volunteers,
+                        "n_islands": n_islands,
+                        **{k: m[k] for k in
+                           ("cross_isp_bytes", "p99_completion_s",
+                            "makespan_s", "full_replication_s",
+                            "origin_up_mb", "replicas", "done",
+                            "replicated", "events", "events_per_sec",
+                            "wall_s", "backend")}},
+        })
+    rows.append({
+        "name": f"swarm_scenario_ix_summary_n{n_volunteers}"
+                f"_i{n_islands}",
+        "us_per_call": 0.0,
+        "derived": (f"cross_isp cut {res['cross_isp_reduction']:.1f}x "
+                    f"makespan x{res['makespan_ratio']:.3f} "
+                    f"p99 x{res['p99_ratio']:.3f} "
+                    f"replicated={res['replicated']}"),
+        "metrics": {"cross_isp_reduction": res["cross_isp_reduction"],
+                    "makespan_ratio": res["makespan_ratio"],
+                    "p99_ratio": res["p99_ratio"],
+                    "done": res["done"],
+                    "replicated": res["replicated"]},
+    })
+    if verbose:
+        for r in rows:
+            print(f"[swarm] {r['name']}: {r['derived']}")
+    return rows
+
+
 def bench_sweep(ns, verbose: bool = True, backend=None,
                 tick_s: float = 0.5):
     """N-sweep of the *batched* array-native Scenario VII: one row per N
@@ -148,7 +200,8 @@ def bench_sweep(ns, verbose: bool = True, backend=None,
                         f"[{res['backend']}]"),
             "metrics": {k: res[k] for k in
                         ("n_volunteers", "makespan_s",
-                         "full_replication_s", "origin_up_mb", "replicas",
+                         "full_replication_s", "p99_completion_s",
+                         "cross_isp_bytes", "origin_up_mb", "replicas",
                          "done", "replicated", "events", "logical_events",
                          "events_per_sec", "heap_events_per_sec",
                          "batch_ops", "coalesced_events", "ticks",
@@ -221,6 +274,13 @@ def bench(verbose: bool = True, smoke: bool = False):
     # fault-tolerance overhead is a tracked trajectory metric like the
     # flash-crowd numbers above
     rows += bench_scenario_viii(verbose=verbose)
+    # Scenario IX (P4P): smoke runs the CI-sized N=64/4-island WAN, the
+    # full bench the headline N=500/8-island configuration
+    if smoke:
+        rows += bench_scenario_ix(verbose=verbose, n_volunteers=64,
+                                  n_islands=4, image_mb=8.0)
+    else:
+        rows += bench_scenario_ix(verbose=verbose)
     # pump micro-benchmark: the ≥10x incremental-vs-reference ratio is the
     # acceptance gate for the bookkeeping rewrite
     rows += exchange_bench.bench(verbose=verbose, smoke=smoke)
@@ -244,7 +304,22 @@ def main(argv=None) -> None:
     ap.add_argument("--backend", choices=("numpy", "jax", "pallas"),
                     help="kernel backend for --sweep (default: best "
                          "available)")
+    ap.add_argument("--scenario-ix", metavar="N,K",
+                    help="run ONLY Scenario IX (P4P vs naive) at N "
+                         "volunteers over K islands (e.g. 500,8 or the "
+                         "CI smoke 64,4); with --json, rows are merged "
+                         "into the file by name")
     args = ap.parse_args(argv)
+    if args.scenario_ix:
+        n, k = (int(x) for x in args.scenario_ix.split(","))
+        rows = bench_scenario_ix(n_volunteers=n, n_islands=k,
+                                 image_mb=8.0 if n <= 100 else 32.0,
+                                 backend=args.backend)
+        if args.json:
+            merge_rows(args.json, rows)
+            print(f"[swarm] merged {len(rows)} scenario-ix rows "
+                  f"into {args.json}")
+        return
     if args.sweep:
         ns = [int(x) for x in args.sweep.split(",") if x.strip()]
         rows = bench_sweep(ns, backend=args.backend)

@@ -12,8 +12,10 @@ from repro.core.swarm import (plan_broadcast, naive_rounds,  # noqa: F401
                               rarest_first_order, rarest_first_order_np)
 from repro.core.swarm_arrays import SwarmHub, SwarmState  # noqa: F401
 from repro.core.swarm_kernels import (available_backends,  # noqa: F401
-                                      choke_order, rarest_orders,
-                                      set_backend)
+                                      choke_order, cost_orders,
+                                      island_has, min_island_cost,
+                                      rarest_orders, set_backend)
+from repro.core.topology import Topology  # noqa: F401
 from repro.core.tracker_server import TrackerConfig, TrackerServer  # noqa: F401
 from repro.core.validation import VotingPool, majority_vote  # noqa: F401
 from repro.core.workunit import (Application, LeaseTable, Part,  # noqa: F401

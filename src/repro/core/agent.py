@@ -36,12 +36,12 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Set
 
 from repro.core import directory as dirs
-from repro.core.messages import (APP_DATA, APP_LIST, BYE, CHOKE, DROP_APP,
-                                 HAVE, INTERESTED, NO_WORK, PART_CANCEL,
-                                 PART_DONE, PEER_GONE, PIECE_CANCEL,
-                                 PIECE_DATA, PIECE_REQ, PING, PONG, REGISTER,
-                                 REQ, RESULT, RESULT_ACK, SEEDER_UPDATE,
-                                 STATUS, UNCHOKE, AppInfo, Msg)
+from repro.core.messages import (APP_DATA, APP_LIST, BYE, CHOKE, COST_MAP,
+                                 DROP_APP, HAVE, INTERESTED, NO_WORK,
+                                 PART_CANCEL, PART_DONE, PEER_GONE,
+                                 PIECE_CANCEL, PIECE_DATA, PIECE_REQ, PING,
+                                 PONG, REGISTER, REQ, RESULT, RESULT_ACK,
+                                 SEEDER_UPDATE, STATUS, UNCHOKE, AppInfo, Msg)
 from repro.core.metrics import AppMetrics
 from repro.core.piece_exchange import PieceExchange
 from repro.core.runtime import CANCELLED, Node, Runtime
@@ -135,6 +135,9 @@ class Agent(Node):
         self._last_server = 0.0         # last message seen from the tracker
         self.dry_until: Dict[str, float] = {}
         self.completed_at: Dict[str, float] = {}
+        # app_id -> sim time the full image verified here (Scenario IX's
+        # per-node completion distribution; p99 comes from these)
+        self.image_completed_at: Dict[str, float] = {}
         self.no_work_from: Dict[str, Set[str]] = collections.defaultdict(set)
         self.cancelled_parts = 0                # PART_CANCEL aborts
         self.dir = (dirs.AgentDirs(self.cfg.root_dir, node_id)
@@ -292,6 +295,10 @@ class Agent(Node):
             self._on_peer_gone(msg.payload["node"])
         elif kind == SEEDER_UPDATE:
             self._on_seeder_update(msg)
+        elif kind == COST_MAP:
+            self.px.set_cost_map(msg.payload["island"],
+                                 msg.payload["costs"],
+                                 msg.payload.get("islands"))
 
     def _on_piece_req(self, msg: Msg) -> None:
         # kept as a seam (tests stub a malicious serving path here); the
@@ -639,6 +646,7 @@ class Agent(Node):
         """Engine callback — all pieces verified: unpack the executable via
         the registry and join the seeder set as a replica."""
         self.images[app_id] = manifest_hash
+        self.image_completed_at.setdefault(app_id, self.rt.now())
         entry = resolve_executable(manifest_hash)
         cap = self.cfg.max_replica_seeders
         if cap is not None:

@@ -29,6 +29,7 @@ from typing import Dict, List, Optional
 from repro.core.agent import Agent, AgentConfig
 from repro.core.faults import Crash, FaultPlan, LinkFault, Partition
 from repro.core.runtime import LinkModel, SimRuntime
+from repro.core.topology import Topology
 from repro.core.tracker_server import TrackerConfig, TrackerServer
 from repro.core.workunit import make_prime_app
 
@@ -38,12 +39,18 @@ def make_chaos_plan(seed: int, volunteers: List[str], *,
                     loss: float = 0.10, dup: float = 0.02,
                     jitter_s: float = 0.2, churn: float = 0.25,
                     n_partitions: int = 1,
-                    partition_s: float = 20.0) -> FaultPlan:
+                    partition_s: float = 20.0,
+                    partition_groups: Optional[List[frozenset]] = None
+                    ) -> FaultPlan:
     """Derive a FaultPlan from a seed and a few knobs.  All randomness
     comes from `random.Random(seed)`, so (seed, knobs) pins the plan:
     `churn` of the volunteers crash inside the first ~45% of `horizon_s`
     and restart after an outage of up to 20% of it; each partition
-    isolates a random island of volunteers for `partition_s`."""
+    isolates a random island of volunteers for `partition_s`.  When
+    `partition_groups` is given (e.g. the node sets of a Topology's
+    islands), every partition isolates one of those groups instead — the
+    worst case for cost-biased selection, since a partitioned ISP island
+    is exactly the peer set P4P steers its members toward."""
     rng = random.Random(seed)
     crashes = []
     n_crash = int(round(churn * len(volunteers)))
@@ -57,8 +64,11 @@ def make_chaos_plan(seed: int, volunteers: List[str], *,
     partitions = []
     for _ in range(n_partitions):
         start = rng.uniform(0.1, 0.5) * horizon_s
-        k = rng.randint(1, max(1, len(volunteers) // 4))
-        island = frozenset(rng.sample(volunteers, k))
+        if partition_groups:
+            island = frozenset(rng.choice(partition_groups))
+        else:
+            k = rng.randint(1, max(1, len(volunteers) // 4))
+            island = frozenset(rng.sample(volunteers, k))
         partitions.append(Partition(start, start + partition_s, (island,)))
     return FaultPlan(seed=seed,
                      link=LinkFault(drop_p=loss, dup_p=dup,
@@ -88,7 +98,10 @@ class ChaosScenario:
                  root_dir: Optional[str] = None,
                  plan: Optional[FaultPlan] = None,
                  batched: bool = False, tick_s: float = 0.5,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None,
+                 n_islands: int = 0,
+                 island_partitions: bool = False,
+                 wan_trunk_Bps: Optional[float] = None):
         self.seed = seed
         self.m_min = m_min
         self.until_s = until_s
@@ -101,23 +114,42 @@ class ChaosScenario:
             from repro.core.swarm_arrays import SwarmHub
             self.hub = SwarmHub(backend=backend)
         self.vol_ids = [f"V{i:02d}" for i in range(n_volunteers)]
+        # topology overlay (ISSUE 7): islands + WAN latencies under the
+        # same fault plan; peer selection goes P4P via the tracker's
+        # COST_MAP and (batched) the hub's cost-aware kernels
+        self.topology = None
+        if n_islands > 0:
+            self.topology = Topology.make(["host"] + self.vol_ids,
+                                          n_islands, seed=seed,
+                                          trunk_Bps=wan_trunk_Bps)
+        groups = None
+        if island_partitions and self.topology is not None:
+            by_isl: Dict[int, set] = {}
+            for nid in self.vol_ids:
+                by_isl.setdefault(self.topology.island_of(nid),
+                                  set()).add(nid)
+            groups = [frozenset(g) for _, g in sorted(by_isl.items())
+                      if g]
         self.plan = plan if plan is not None else make_chaos_plan(
             seed, self.vol_ids, horizon_s=horizon_s, loss=loss, dup=dup,
             jitter_s=jitter_s, churn=churn, n_partitions=n_partitions,
-            partition_s=partition_s)
+            partition_s=partition_s, partition_groups=groups)
         self._perma_dead = {c.node for c in self.plan.crashes
                            if c.restart_s is None}
         link_Bps = uplink_mbps * 1e6 / 8
         self.rt = SimRuntime(link=LinkModel(uplink_Bps=link_Bps,
                                             downlink_Bps=link_Bps),
-                             faults=self.plan)
+                             faults=self.plan, topology=self.topology)
         if self.hub is not None:
             # authoritative liveness for the shared arrays: reset a
             # crashed node's row at crash time, not on (possibly stale)
             # PEER_GONE relays that may trail its restart
             self.rt.crash_hooks.append(self.hub.node_gone)
+            if self.topology is not None:
+                self.hub.set_topology(self.topology)
         self.rt.add_node(TrackerServer(
-            config=TrackerConfig(ping_interval_s=2.0)))
+            config=TrackerConfig(ping_interval_s=2.0),
+            topology=self.topology))
         self.server = self.rt.nodes["server"]
         # recovery timescales sized to the fault model: leases must expire
         # well before a lost RESULT costs a makespan-visible stall, piece
@@ -255,6 +287,7 @@ class ChaosScenario:
             "replicas": sum(1 for a in self.volunteers()
                             if self.APP_ID in a.images),
             "origin_up_mb": rt.tx_bytes.get("host", 0) / 1e6,
+            "cross_isp_bytes": rt.cross_isp_bytes,
             "dropped_msgs": rt.dropped_msgs,
             "dup_msgs": rt.dup_msgs,
             "crashes": rt.crash_count,
@@ -277,11 +310,15 @@ def main(argv=None) -> None:
                     help="assert the chaos invariants after the run")
     ap.add_argument("--batched", action="store_true",
                     help="run the array-native batched swarm path")
+    ap.add_argument("--islands", type=int, default=0,
+                    help="WAN islands (0 = flat); partitions align with "
+                         "island boundaries when set")
     args = ap.parse_args(argv)
     sc = ChaosScenario(seed=args.seed, n_volunteers=args.volunteers,
                        loss=args.loss, jitter_s=args.jitter,
                        churn=args.churn, n_partitions=args.partitions,
-                       batched=args.batched)
+                       batched=args.batched, n_islands=args.islands,
+                       island_partitions=args.islands > 0)
     sc.run()
     print(sc.report())
     if args.check:

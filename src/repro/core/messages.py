@@ -57,6 +57,11 @@ PART_DONE = "PART_DONE"        # seeder <-> seeder: validated-part gossip
 PEER_GONE = "PEER_GONE"        # server -> agents: volunteer left/died;
                                  # reclaim its leases immediately
 
+# --- topology / P4P (ALTO cost map, ISSUE 7) ---------------------------- #
+COST_MAP = "COST_MAP"          # server -> agent on REGISTER: your island,
+                               # endpoint costs to every island, and the
+                               # node -> island directory
+
 # --- choke scheduler + endgame (PieceExchange engine) ------------------- #
 INTERESTED = "INTERESTED"      # leecher -> holder: I want pieces of app
 CHOKE = "CHOKE"                # holder -> leecher: upload slot withdrawn

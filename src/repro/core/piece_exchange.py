@@ -191,6 +191,13 @@ class PieceExchange:
         # black-holed link cannot capture a piece's retries forever.
         # Cleared per piece the moment a copy verifies.
         self.stalled_holders: Dict[str, Dict[int, Set[str]]] = {}
+        # --- ALTO cost map (tracker COST_MAP; P4P holder preference) ------ #
+        # None until a COST_MAP arrives; then holder tie-breaks prefer
+        # cheap (same-island) peers.  Shun/stall signals always dominate
+        # the cost, so the bias decays when same-island holders starve.
+        self.my_island = 0
+        self.island_costs: Optional[List[int]] = None
+        self.peer_islands: Dict[str, int] = {}
         # --- incremental availability (tentpole) -------------------------- #
         # per-app int32 array: how many *partial* holders have each piece
         # (full seeders add a uniform constant tracked by len(full_seeders))
@@ -223,6 +230,28 @@ class PieceExchange:
             collections.defaultdict(lambda: collections.defaultdict(int))
         self.cancels_sent = 0
         self.dup_piece_data = 0
+
+    # ======================== ALTO cost map (P4P) ======================= #
+    def set_cost_map(self, island: int, costs: List[int],
+                     islands: Optional[Dict[str, int]] = None) -> None:
+        """Install the tracker's COST_MAP: this node's island, its
+        endpoint-cost row (cost to every island), and the peer->island
+        directory.  Idempotent; a re-REGISTER just refreshes it."""
+        self.my_island = int(island)
+        self.island_costs = list(costs)
+        if islands:
+            self.peer_islands.update(islands)
+
+    def _peer_cost(self, peer: str) -> int:
+        """ALTO cost to a peer; 0 before any COST_MAP arrives (flat
+        world), and pessimistically the most expensive known cost for
+        peers the directory does not list."""
+        if self.island_costs is None:
+            return 0
+        isl = self.peer_islands.get(peer)
+        if isl is None or not 0 <= isl < len(self.island_costs):
+            return max(self.island_costs)
+        return self.island_costs[isl]
 
     # ===================== lifecycle / membership ======================= #
     def add_local_app(self, app_id: str, manifest: PieceManifest,
@@ -586,8 +615,12 @@ class PieceExchange:
                     if not cands:
                         continue
                     shun = stalled.get(piece_id, ())
+                    # holder tie-break: never-shunned first, then cheapest
+                    # island (P4P; 0 for everyone without a cost map, so
+                    # the flat order is unchanged), then least loaded
                     peer = min(cands, key=lambda h: (
-                        h in shun, self.peer_load.get(h, 0), h))
+                        h in shun, self._peer_cost(h),
+                        self.peer_load.get(h, 0), h))
                     pending[piece_id] = {peer: now}
                     usable.discard(peer)
                     usable_full.discard(peer)
@@ -659,7 +692,14 @@ class PieceExchange:
             if len(asked) >= cap:
                 continue
             shun = stalled.get(piece_id, ())
-            for holder in self._holders(app_id, piece_id):
+            holders = self._holders(app_id, piece_id)
+            if self.island_costs is not None:
+                # P4P: duplicate to same-island holders first (shunned
+                # ones are skipped below regardless of cost, so the bias
+                # decays when the cheap holders starve)
+                holders = sorted(holders,
+                                 key=lambda h: (self._peer_cost(h), h))
+            for holder in holders:
                 if holder in asked or holder in shun:
                     continue
                 asked[holder] = now

@@ -27,6 +27,7 @@ from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
 from repro.core.faults import FaultPlan
 from repro.core.messages import Msg
+from repro.core.topology import Topology
 
 
 class Node:
@@ -114,10 +115,20 @@ class SimRuntime(Runtime):
     crash/restart schedules.  All fault randomness comes from one
     `random.Random(plan.seed)` and is only drawn when the effective fault
     is non-trivial, so a zero-fault plan leaves the event trace untouched.
+
+    An optional `Topology` (core.topology) layers a WAN over the flat
+    LinkModel: messages crossing island (ISP) boundaries pay the
+    inter-island latency, bulk transfers additionally serialise through
+    the shared inter-island trunk pipe (when the topology carries a
+    bandwidth matrix), and every cross-island byte is accounted in
+    `cross_isp_bytes` — the metric Scenario IX's P4P selection exists to
+    cut.  `topology=None` (or a flat single-island topology) leaves the
+    trace event-for-event identical, like a zero-fault plan.
     """
 
     def __init__(self, link: Optional[LinkModel] = None,
-                 faults: Optional[FaultPlan] = None):
+                 faults: Optional[FaultPlan] = None,
+                 topology: Optional[Topology] = None):
         self.nodes: Dict[str, Node] = {}
         self.link = link or LinkModel()
         self._t = 0.0
@@ -147,6 +158,12 @@ class SimRuntime(Runtime):
         # liveness signal for batched-mode swarm state (PEER_GONE relays
         # can arrive after a restart and must not wipe the fresh state)
         self.crash_hooks: List[Callable[[str], None]] = []
+        # --- WAN topology (core.topology) ------------------------------ #
+        self.topology = topology
+        # cross-island egress accounting — Scenario IX's headline metric
+        self.cross_isp_bytes = 0
+        # (src_island, dst_island) -> time the shared trunk frees up
+        self._xlink_free: Dict[Tuple[int, int], float] = {}
         # --- fault injection (core.faults) ----------------------------- #
         self.faults = faults
         self._rng = random.Random(faults.seed) if faults is not None else None
@@ -202,6 +219,8 @@ class SimRuntime(Runtime):
             at = t + self.link.base_latency_s
         else:
             at = self._t + self.link.latency(msg.size_bytes)
+        if self.topology is not None:
+            at = self._topo_delay(src, dst, msg, bulk, at)
         if self.faults is not None:
             # loss/dup/jitter apply past the pipe model: the bytes were
             # transmitted (and accounted), the network lost them.  RNG is
@@ -229,6 +248,29 @@ class SimRuntime(Runtime):
                              if fault.jitter_s else self.link.base_latency_s)
                     self._at(at + extra, self._deliver, (dst, msg))
         self._at(at, self._deliver, (dst, msg))
+
+    def _topo_delay(self, src: str, dst: str, msg: Msg,
+                    bulk: bool, at: float) -> float:
+        """WAN leg of a transfer.  Intra-island messages pass through
+        untouched (a zero latency is never added, so a flat topology is
+        event-for-event identical to no topology).  Cross-island bulk
+        transfers additionally serialise through the shared per-island-pair
+        trunk pipe when the topology carries a bandwidth matrix."""
+        topo = self.topology
+        si = topo.island_of(src)
+        di = topo.island_of(dst)
+        if si != di:
+            self.cross_isp_bytes += msg.size_bytes
+            if bulk:
+                bw = topo.trunk_Bps(si, di)
+                if bw is not None:
+                    start = max(at, self._xlink_free.get((si, di), 0.0))
+                    at = start + msg.size_bytes / bw
+                    self._xlink_free[(si, di)] = at
+        extra = topo.latency(si, di)
+        if extra:
+            at += extra
+        return at
 
     def _deliver(self, dst: str, msg: Msg) -> None:
         if self.faults is not None \

@@ -68,10 +68,20 @@ from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
-from repro.core.swarm_kernels import choke_order, get_backend, rarest_orders
+from repro.core.swarm_kernels import (choke_order, cost_orders, get_backend,
+                                      island_has, min_island_cost,
+                                      rarest_orders)
 
-# rows that must lose every name tie-break (non-candidates) get this rank
-_RANK_INF = np.int64(2 ** 31)
+# holder-key layout under topology (P4P): rank fills the low 31 bits,
+# the ALTO cost (<= COST_NONE = 64) sits above it, and the shun bit sits
+# above the cost — so shunned holders lose to ANY live holder however
+# expensive (the bias-decays-under-starvation property)
+_COST_SHIFT = np.int64(2 ** 32)
+_SHUN_INF = np.int64(2 ** 45)
+# the choke-ranking tie-break must survive the jax backend's int32 keys:
+# row ranks are < 2^20 for any simulable swarm, costs <= 15, so
+# cost * 2^20 + rank < 2^24
+_CHOKE_COST_SHIFT = np.int64(2 ** 20)
 
 
 class SwarmState:
@@ -113,6 +123,11 @@ class SwarmState:
         self.offsets = np.zeros(cap, dtype=np.int64)
         self._ranks = np.zeros(cap, dtype=np.int64)
         self._ranks_dirty = True
+        # --- topology (P4P) ------------------------------------------------ #
+        # per-row island index; populated via `lookup_island` (set by
+        # SwarmHub.set_topology) as rows are allocated
+        self.island = np.zeros(cap, dtype=np.int32)
+        self.lookup_island = None
         # --- scheduling bookkeeping --------------------------------------- #
         self.dirty: Set[int] = set()       # rows to re-pump this tick
         self.starved = np.zeros(cap, dtype=bool)
@@ -135,7 +150,7 @@ class SwarmState:
             b[:cap] = a
             grown[name] = b
         for name in ("have_n", "full", "fetching", "alive", "offsets",
-                     "_ranks", "starved", "opt_idx", "opt_peer"):
+                     "_ranks", "starved", "opt_idx", "opt_peer", "island"):
             a = getattr(self, name)
             b = np.zeros(new, dtype=a.dtype)
             if name == "opt_peer":
@@ -165,6 +180,8 @@ class SwarmState:
         self.alive[i] = True
         self.n_alive += 1
         self.offsets[i] = sum(ord(c) for c in name + self.app_id)
+        if self.lookup_island is not None:
+            self.island[i] = self.lookup_island(name)
         self._ranks_dirty = True
         return i
 
@@ -203,12 +220,34 @@ class SwarmHub:
         self.batch_ops = 0                 # array-applied decisions
         self.coalesced = 0                 # control messages replaced
         self.ticks = 0
+        # topology (P4P mode): ALTO cost matrix folded into selection
+        self.topology = None
+        self.cost_matrix: Optional[np.ndarray] = None
 
     # ========================= registration ============================= #
+    def set_topology(self, topology) -> None:
+        """Enable P4P selection: piece orders and holder tie-breaks fold
+        in the topology's ALTO cost map.  `None` restores pure rarity
+        (the no-topology decisions, bit for bit)."""
+        self.topology = topology
+        if topology is None:
+            self.cost_matrix = None
+            for st in self.states.values():
+                st.lookup_island = None
+                st.island[:] = 0
+            return
+        self.cost_matrix = np.asarray(topology.cost_map(), dtype=np.int64)
+        for st in self.states.values():
+            st.lookup_island = topology.island_of
+            for i, name in enumerate(st.names):
+                st.island[i] = topology.island_of(name)
+
     def _state(self, app_id: str, manifest) -> SwarmState:
         st = self.states.get(app_id)
         if st is None:
             st = self.states[app_id] = SwarmState(app_id, manifest)
+            if self.topology is not None:
+                st.lookup_island = self.topology.island_of
         return st
 
     def _attach(self, px, app_id: str, manifest) -> Tuple[SwarmState, int]:
@@ -441,7 +480,14 @@ class SwarmHub:
             if free <= 0:
                 continue
             cs = np.nonzero(want[h])[0]
-            for i in cs[np.argsort(ranks[cs], kind="stable")][:free]:
+            gkey = ranks[cs]
+            if self.cost_matrix is not None:
+                # P4P: grant free slots to same-island leechers first —
+                # the unchoke graph, not just the request order, decides
+                # which bytes cross an ISP boundary
+                gkey = gkey + self._holder_costs(st, int(h))[cs] \
+                    * _COST_SHIFT
+            for i in cs[np.argsort(gkey, kind="stable")][:free]:
                 self._apply_grant(st, h, int(i))
 
     def _rechoke(self, st: SwarmState, now: float) -> None:
@@ -469,10 +515,19 @@ class SwarmHub:
         if ranked.size:
             cm = np.repeat(cand[None, :], ranked.size, axis=0)
             cm[np.arange(ranked.size), ranked] = False
+            rank_key = ranks[:n]
+            if self.cost_matrix is not None:
+                # P4P tie-break: reciprocal rates stay primary, but rate
+                # ties (the whole swarm, early in a flash crowd) resolve
+                # cheapest-island-first instead of by name alone.  Small
+                # shift: the jax backend keys are int32.
+                rank_key = (self.cost_matrix[
+                    st.island[ranked][:, None], st.island[None, :n]]
+                    * _CHOKE_COST_SHIFT + ranks[None, :n])
             order = choke_order(
                 st.recv[ranked][:, :n] + st.recv_prev[ranked][:, :n],
                 st.sent[ranked][:, :n] + st.sent_prev[ranked][:, :n],
-                cm, ranks[:n], backend=self.backend)
+                cm, rank_key, backend=self.backend)
         krow = {int(h): k for k, h in enumerate(ranked)}
         for h in holders:
             h = int(h)
@@ -517,6 +572,28 @@ class SwarmHub:
             st.win_start = now
 
     # ========================== piece selection ========================= #
+    def _piece_cost(self, st: SwarmState, rows: np.ndarray) -> np.ndarray:
+        """(len(rows), P) cheapest-holder cost plane rows for the given
+        leecher rows: `island_has` (backend kernel) reduces the alive
+        have-matrix to island-level availability, `min_island_cost`
+        derives the per-source-island cost plane, and each leecher reads
+        its own island's row."""
+        n = st.n
+        k = self.topology.n_islands
+        have = (st.have[:n, :] | st.full[:n, None]) & st.alive[:n, None]
+        member = np.zeros((k, n), dtype=bool)
+        member[st.island[:n], np.arange(n)] = True
+        avail = island_has(have, member, backend=self.backend)
+        plane = min_island_cost(avail, self.cost_matrix)       # (K, P)
+        return plane[st.island[rows]]
+
+    def _holder_costs(self, st: SwarmState, i: int) -> Optional[np.ndarray]:
+        """(n,) ALTO cost from leecher row i's island to every row's
+        island, or None when no topology is set."""
+        if self.cost_matrix is None:
+            return None
+        return self.cost_matrix[st.island[i], st.island[:st.n]]
+
     def _usable_rows(self, st: SwarmState, i: int) -> np.ndarray:
         """Holder rows leecher i may address a request to right now:
         unchoked-by (unless choking is globally off), holding something,
@@ -562,6 +639,7 @@ class SwarmHub:
             return out, True
         stalled = px.stalled_holders.get(app_id, {})
         ranks = st.ranks
+        costs = self._holder_costs(st, i)
         taken = np.zeros(idx.size, dtype=bool)
         n_missing = st.P - int(st.have_n[i]) - len(pending)
         for k in range(min(n_missing, order.shape[0])):
@@ -575,11 +653,16 @@ class SwarmHub:
             if cand.size == 0:
                 continue
             key = ranks[cand].astype(np.int64)
+            if costs is not None:
+                # P4P holder tie-break: cheapest island first, then name;
+                # the shun bit still dominates the cost (bias decays when
+                # same-island holders starve)
+                key = key + costs[cand] * _COST_SHIFT
             shun = stalled.get(p)
             if shun:
                 key = key + np.array(
                     [st.names[int(j)] in shun for j in cand],
-                    dtype=np.int64) * _RANK_INF
+                    dtype=np.int64) * _SHUN_INF
             j = int(cand[int(np.argmin(key))])
             out.append((p, j))
             taken[np.searchsorted(idx, j)] = True
@@ -622,8 +705,13 @@ class SwarmHub:
         for k, i in enumerate(rows):
             for p in st.clients[int(i)].pending.get(app_id, {}):
                 missing[k, p] = False
-        orders = rarest_orders(missing, st.counts, st.offsets[rows], st.P,
-                               backend=self.backend)
+        if self.cost_matrix is not None:
+            pc = self._piece_cost(st, rows)
+            orders = cost_orders(missing, st.counts, st.offsets[rows], pc,
+                                 st.P, backend=self.backend)
+        else:
+            orders = rarest_orders(missing, st.counts, st.offsets[rows],
+                                   st.P, backend=self.backend)
         for k, i in enumerate(rows):
             i = int(i)
             decisions, starved = self._match_row(st, i, orders[k], now)
@@ -652,6 +740,7 @@ class SwarmHub:
             cap = max(int(getattr(px.cfg, "endgame_dup", 3)), 1)
             stalled = px.stalled_holders.get(app_id, {})
             bad = px.bad_peers.get(app_id, ())
+            costs = self._holder_costs(st, i)
             for piece_id, asked in list(pending.items()):
                 if len(asked) >= cap:
                     continue
@@ -659,7 +748,11 @@ class SwarmHub:
                 hm = (st.have[:n, piece_id] | st.full[:n]) & st.alive[:n]
                 hm[i] = False
                 cand = np.nonzero(hm)[0]
-                for j in cand[np.argsort(ranks[cand], kind="stable")]:
+                hkey = ranks[cand]
+                if costs is not None:
+                    # P4P endgame: duplicate to same-island holders first
+                    hkey = hkey + costs[cand] * _COST_SHIFT
+                for j in cand[np.argsort(hkey, kind="stable")]:
                     name = st.names[int(j)]
                     if name in asked or name in shun or name in bad:
                         continue
@@ -703,9 +796,15 @@ class SwarmHub:
         missing = ~st.have[i, :]       # invert copies; safe to edit
         for p in px.pending.get(app_id, {}):
             missing[p] = False
-        order = rarest_orders(missing[None, :], st.counts,
-                              st.offsets[i:i + 1], st.P,
-                              backend=self.backend)[0]
+        if self.cost_matrix is not None:
+            pc = self._piece_cost(st, np.array([i], dtype=np.int64))
+            order = cost_orders(missing[None, :], st.counts,
+                                st.offsets[i:i + 1], pc, st.P,
+                                backend=self.backend)[0]
+        else:
+            order = rarest_orders(missing[None, :], st.counts,
+                                  st.offsets[i:i + 1], st.P,
+                                  backend=self.backend)[0]
         decisions, _ = self._match_row(st, i, order, now)
         return [(p, st.names[j]) for p, j in decisions]
 
@@ -726,6 +825,7 @@ class SwarmHub:
         stalled = px.stalled_holders.get(app_id, {})
         bad = px.bad_peers.get(app_id, ())
         ranks = st.ranks
+        costs = self._holder_costs(st, i)
         out: List[Tuple[int, str]] = []
         for piece_id, asked in pending.items():
             room = cap - len(asked)
@@ -735,7 +835,10 @@ class SwarmHub:
             hm = (st.have[:n, piece_id] | st.full[:n]) & st.alive[:n]
             hm[i] = False
             cand = np.nonzero(hm)[0]
-            for j in cand[np.argsort(ranks[cand], kind="stable")]:
+            hkey = ranks[cand]
+            if costs is not None:
+                hkey = hkey + costs[cand] * _COST_SHIFT
+            for j in cand[np.argsort(hkey, kind="stable")]:
                 name = st.names[int(j)]
                 if name in asked or name in shun or name in bad:
                     continue

@@ -173,6 +173,145 @@ def rarest_orders(missing: np.ndarray, counts: np.ndarray,
     return np.argsort(keys, axis=1, kind="stable").astype(np.int32)
 
 
+# ================== topology-aware (P4P) scoring ======================== #
+# Cost-aware piece selection (ISSUE 7): each node ranks its missing pieces
+# by (network cost of the cheapest holder island, rarity, rotated id, id).
+# Cost is PRIMARY: a piece held on the node's own island always beats one
+# only available across an ISP boundary, which is what cuts cross-ISP
+# bytes.  When every piece has the same cheapest-holder cost — one island,
+# or all same-island holders starved away — the cost plane is uniform and
+# the order degrades to exactly `rarest_orders` (the decay-to-rarity
+# property the chaos overlay test pins).
+#
+# The backend-differentiated work is `island_has`: a (K, P) island-level
+# availability reduction over the (N, P) have-matrix, computed as a
+# onehot(K, N) @ have(N, P) matmul (MXU-shaped on TPU).  The final
+# cost ⊕ rarity combine happens host-side in int64 over the backend's
+# int32/int64 base keys — same discipline as the masking + argsort in
+# `rarest_orders`, and it sidesteps the int32 headroom the jax/pallas
+# base keys already exhaust (counts * P^2 < 2^31 leaves no room for a
+# cost multiplier).
+
+# sentinel "no holder anywhere" cost: above any real ALTO cost (<= 15)
+COST_NONE = np.int64(64)
+
+
+def island_has_np(have: np.ndarray, member: np.ndarray) -> np.ndarray:
+    """(K, P) bool: does any alive node of island k hold piece p?
+
+    ``have``   — (N, P) bool/int piece-holding matrix (alive holders only;
+                 the caller zeroes dead/irrelevant rows);
+    ``member`` — (K, N) bool island membership (onehot of island index).
+    """
+    m = np.asarray(member, dtype=np.int32)
+    h = np.asarray(have, dtype=np.int32)
+    return (m @ h) > 0
+
+
+if _HAVE_JAX:
+    @jax.jit
+    def _island_has_jax(have, member):
+        return (member.astype(jnp.int32) @ have.astype(jnp.int32)) > 0
+
+    def _island_has_pallas(have, member, interpret: bool = True):
+        """Pallas island-availability kernel: one grid step per island,
+        reducing that island's member rows over the have-matrix as a
+        (1, N) x (N, P) dot — the MXU-native shape of the reduction."""
+        import jax.experimental.pallas as pl
+
+        k, n = member.shape
+        p = have.shape[1]
+
+        def kernel(member_ref, have_ref, out_ref):
+            m = member_ref[...].astype(jnp.float32)          # (1, n)
+            h = have_ref[...].astype(jnp.float32)            # (n, p)
+            out_ref[...] = jnp.dot(
+                m, h, preferred_element_type=jnp.float32) > 0
+
+        return pl.pallas_call(
+            kernel,
+            grid=(k,),
+            in_specs=[
+                pl.BlockSpec((1, n), lambda i: (i, 0)),
+                pl.BlockSpec((n, p), lambda i: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, p), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((k, p), jnp.bool_),
+            interpret=interpret,
+        )(member.astype(jnp.int32), have.astype(jnp.int32))
+
+
+def island_has(have: np.ndarray, member: np.ndarray,
+               backend: Optional[str] = None) -> np.ndarray:
+    """Backend-selectable island-level availability reduction."""
+    b = get_backend(backend)
+    if b == "numpy":
+        return island_has_np(have, member)
+    hj = jnp.asarray(np.asarray(have, dtype=np.int32))
+    mj = jnp.asarray(np.asarray(member, dtype=np.int32))
+    if b == "pallas":
+        out = _island_has_pallas(hj, mj)
+    else:
+        out = _island_has_jax(hj, mj)
+    return np.asarray(out, dtype=bool)
+
+
+def min_island_cost(avail: np.ndarray, cost: np.ndarray) -> np.ndarray:
+    """(K, P) per-source-island cheapest-holder cost plane.
+
+    ``avail`` — (K, P) bool island availability (from `island_has`);
+    ``cost``  — (K, K) ALTO cost matrix (row = source island).
+    Entry [s, p] is the minimum cost from island s to any island holding
+    piece p; pieces nobody holds get COST_NONE (they are masked out of
+    requests anyway, but the sentinel keeps the key finite and uniform).
+    Plain numpy on purpose: K x K x P is tiny next to the N x P reduction,
+    and sharing one implementation keeps every backend bit-identical.
+    """
+    a = np.asarray(avail, dtype=bool)                       # (K, P)
+    c = np.asarray(cost, dtype=np.int64)                    # (K, K)
+    # broadcast: plane[s, k, p] = cost[s, k] where island k holds p
+    plane = np.where(a[None, :, :], c[:, :, None], COST_NONE)
+    return plane.min(axis=1)                                # (K, P)
+
+
+def cost_rarest_keys(counts: np.ndarray, offsets: np.ndarray,
+                     piece_cost: np.ndarray, n_pieces: int,
+                     backend: Optional[str] = None) -> np.ndarray:
+    """Cost-primary composite keys: (R, P) int64
+    ``key = piece_cost * span + rarest_key`` with
+    ``span = (max_count + 1) * n^2`` so the cost strictly dominates and
+    the within-cost order is exactly the rarest-first order.
+
+    ``piece_cost`` — (R, P) per-(node, piece) cheapest-holder cost (the
+    node's island row of the `min_island_cost` plane).  A uniform cost
+    plane shifts every key by the same amount: ordering identical to
+    `rarest_keys` (decay-to-rarity, differential-tested).
+    """
+    base = rarest_keys(counts, offsets, n_pieces, backend=backend)
+    n = max(int(n_pieces), 1)
+    max_count = int(np.asarray(counts).max()) if np.asarray(counts).size \
+        else 0
+    span = np.int64(max_count + 1) * n * n
+    return np.asarray(piece_cost, dtype=np.int64) * span \
+        + base.astype(np.int64)
+
+
+def cost_orders(missing: np.ndarray, counts: np.ndarray,
+                offsets: np.ndarray, piece_cost: np.ndarray,
+                n_pieces: int,
+                backend: Optional[str] = None) -> np.ndarray:
+    """Batched cost-aware piece order per node (the P4P `rarest_orders`).
+
+    Same contract as `rarest_orders` plus ``piece_cost`` (R, P): row r's
+    first ``missing[r].sum()`` entries are node r's missing pieces ordered
+    by (cheapest-holder cost, rarity, rotated id, id).
+    """
+    keys = cost_rarest_keys(counts, offsets, piece_cost, n_pieces,
+                            backend=backend)
+    keys = np.where(np.asarray(missing, dtype=bool), keys, KEY_INF)
+    return np.argsort(keys, axis=1, kind="stable").astype(np.int32)
+
+
 # ========================= choke ranking ================================ #
 def choke_order_np(recv: np.ndarray, sent: np.ndarray, cand: np.ndarray,
                    ranks: np.ndarray) -> np.ndarray:
@@ -182,14 +321,19 @@ def choke_order_np(recv: np.ndarray, sent: np.ndarray, cand: np.ndarray,
     (-rate_from[p], -rate_to[p], p))`` for all holders at once via a
     chain of stable argsorts (last key applied last is primary).
     ``ranks`` maps column -> lexicographic rank of the node name, which
-    is what the scalar string tie-break sorts by.  Non-candidate columns
-    are pushed to the back.  Returns (H, C) int32 column indices.
+    is what the scalar string tie-break sorts by; a 2-D (H, C) ranks
+    matrix gives every holder row its own tie-break key (P4P mode packs
+    the ALTO cost above the name rank).  Non-candidate columns are
+    pushed to the back.  Returns (H, C) int32 column indices.
     """
     cand = np.asarray(cand, dtype=bool)
     # non-candidates must lose every comparison: real rates are >= 0
     r1 = np.where(cand, recv, -1.0)
     r2 = np.where(cand, sent, -1.0)
-    nm = np.where(cand, ranks[None, :], ranks.max() + 1 if ranks.size
+    rk = np.asarray(ranks)
+    if rk.ndim == 1:
+        rk = rk[None, :]
+    nm = np.where(cand, rk, rk.max() + 1 if rk.size
                   else 1).astype(np.int64)
     # stable multi-key sort: name (tie-break), then -sent, then -recv
     order = np.argsort(nm, axis=1, kind="stable")
@@ -206,8 +350,11 @@ if _HAVE_JAX:
     def _choke_order_jax(recv, sent, cand, ranks):
         r1 = jnp.where(cand, recv, -1.0)
         r2 = jnp.where(cand, sent, -1.0)
-        maxr = jnp.max(ranks) + 1 if ranks.size else 1
-        nm = jnp.where(cand, ranks[None, :], maxr).astype(jnp.int32)
+        # int32 keys (jax runs without x64): callers packing cost above
+        # the name rank must keep cost * shift + rank < 2^31
+        rk = ranks if ranks.ndim == 2 else ranks[None, :]
+        maxr = jnp.max(rk) + 1 if rk.size else 1
+        nm = jnp.where(cand, rk, maxr).astype(jnp.int32)
         order = jnp.argsort(nm, axis=1, stable=True)
         for key in (-r2, -r1):
             k = jnp.take_along_axis(key, order, axis=1)

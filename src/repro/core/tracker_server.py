@@ -29,9 +29,9 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Set
 
-from repro.core.messages import (APP_LIST, BYE, DROP_APP, HAVE, PEER_GONE,
-                                 PING, PONG, REGISTER, SEEDER_UPDATE,
-                                 STATUS, AppInfo, Msg)
+from repro.core.messages import (APP_LIST, BYE, COST_MAP, DROP_APP, HAVE,
+                                 PEER_GONE, PING, PONG, REGISTER,
+                                 SEEDER_UPDATE, STATUS, AppInfo, Msg)
 from repro.core.runtime import Node, Runtime
 from repro.core.workunit import mask_nbytes
 
@@ -47,10 +47,16 @@ class TrackerConfig:
 class TrackerServer(Node):
     def __init__(self, node_id: str = "server",
                  config: Optional[TrackerConfig] = None,
-                 val_hook: Optional[Callable[[str, Msg], bool]] = None):
+                 val_hook: Optional[Callable[[str, Msg], bool]] = None,
+                 topology=None):
         self.node_id = node_id
         self.cfg = config or TrackerConfig()
         self.val_hook = val_hook            # VAL customisation point (§III.G)
+        # ALTO server role (P4P): when a core.topology.Topology is set,
+        # every REGISTER is answered with a COST_MAP carrying the
+        # registrant's island, its endpoint-cost row, and the node ->
+        # island directory that peer selection ranks holders with
+        self.topology = topology
         # synchronizer state
         self.app_list: Dict[str, AppInfo] = {}
         self.members: Set[str] = set()
@@ -123,6 +129,14 @@ class TrackerServer(Node):
                     self._drop_stale_seeder(msg.src)
             self.VAL(msg.src, msg, alive=True)
             self.INIT(msg.src)
+            if self.topology is not None:
+                isl = self.topology.island_of(msg.src)
+                self.rt.send(msg.src, Msg(
+                    COST_MAP, self.node_id,
+                    {"island": isl,
+                     "costs": self.topology.cost_row(isl),
+                     "islands": dict(self.topology.islands)},
+                    size_bytes=64 + 4 * len(self.topology.islands)))
         elif msg.kind == STATUS:
             # a STATUS from a volunteer we dropped (e.g. a ping false
             # positive under congestion) re-admits it
