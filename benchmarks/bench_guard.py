@@ -10,7 +10,10 @@ meaningfully slower:
     --makespan-drift (default 10%), or
   * a row's cross-ISP bytes grew more than --cross-isp-drift (default
     10%) or its p99 node-completion time drifted past --makespan-drift
-    (the Scenario IX P4P economics; virtual-time, machine-independent).
+    (the Scenario IX P4P economics; virtual-time, machine-independent), or
+  * a checkpoint flash-crowd row's p99 time-to-ready (``ttr_p99_s``) or
+    origin egress (``origin_egress_bytes``) regressed past the same
+    bands (the Scenario XI swarm-served-checkpoint economics).
 
 Only rows present in BOTH files are compared (a CI smoke sweep that
 stops at N=500 is judged against the matching baseline rows only), so
@@ -44,7 +47,9 @@ def check(baseline_path: str, current_path: str, evps_drop: float = 0.20,
                 ("makespan_s", makespan_drift, False),
                 ("full_replication_s", makespan_drift, False),
                 ("p99_completion_s", makespan_drift, False),
-                ("cross_isp_bytes", cross_isp_drift, False)):
+                ("cross_isp_bytes", cross_isp_drift, False),
+                ("ttr_p99_s", makespan_drift, False),
+                ("origin_egress_bytes", cross_isp_drift, False)):
             if key not in b or key not in c:
                 continue
             bv, cv = float(b[key]), float(c[key])
@@ -63,7 +68,8 @@ def check(baseline_path: str, current_path: str, evps_drop: float = 0.20,
                 failures.append((name, key, bv, cv))
         # correctness riding along: a run that stopped replicating is a
         # regression no matter how fast it got
-        for key in ("done", "replicated"):
+        for key in ("done", "replicated", "ready", "all_ready",
+                    "chaos_ready"):
             if b.get(key) is True and c.get(key) is not True:
                 failures.append((name, key, True, c.get(key)))
     if verbose:

@@ -695,10 +695,172 @@ def scenario_ix(verbose: bool = True, n_volunteers: int = 500,
     return res
 
 
+def scenario_xi(verbose: bool = True, n_replicas: int = 50,
+                ckpt_mb: float = 2048.0, n_pieces: int = 128,
+                n_islands: int = 8, uplink_mbps: float = 200.0,
+                until_h: float = 48.0, seed: int = 11,
+                include_chaos: bool = True,
+                include_islands: bool = True) -> dict:
+    """Scenario XI: swarm-served checkpoints — replica cold-start flash
+    crowd pulling a multi-GB sharded checkpoint.
+
+    The production story behind the ROADMAP's "close the loop with the
+    jax side": an autoscaling event brings up R fresh serving replicas at
+    t=0 and all of them need the same committed checkpoint.  The
+    checkpoint is a pure-replication swarm Application (no work parts —
+    `checkpoint/swarm_restore.checkpoint_application` builds the same
+    shape from a real `CheckpointStore` step; here the multi-GB image is
+    simulated bytes on the same protocol).  Two modes per topology:
+
+      * ``origin`` — the blob-store baseline: every replica pulls every
+        piece straight from the origin (`AgentConfig.fetch_from`), which
+        serialises R full images through one uplink;
+      * ``swarm``  — replicas exchange pieces leecher-to-seeder, so the
+        origin uploads each piece roughly once.
+
+    Run on a flat LAN and on an `n_islands` WAN (tracker serves the ALTO
+    COST_MAP, scalar P4P selection).  Headline metrics per run:
+    **ttr_p99_s** (p99 time-to-ready across replicas — a replica is
+    ready the moment its verified piece set completes and it can load
+    params) and **origin_egress_bytes**.  Targets: >=10x origin egress
+    cut, >=3x p99 time-to-ready.  Chaos overlay: the origin dies as soon
+    as the first replica is ready and every replica must still become
+    ready from replica seeders alone.
+    """
+    from repro.core.runtime import LinkModel
+    from repro.core.topology import Topology
+    from repro.core.workunit import Application
+
+    ckpt_bytes = int(ckpt_mb * 1e6)
+    link_Bps = uplink_mbps * 1e6 / 8
+    app_id = "ckpt"
+    rep_ids = [f"R{i:03d}" for i in range(n_replicas)]
+
+    def _one(origin_only: bool, islands: int, chaos: bool = False) -> dict:
+        topo = Topology.make(["origin"] + rep_ids, islands, seed=seed) \
+            if islands else None
+        rt = SimRuntime(link=LinkModel(uplink_Bps=link_Bps,
+                                       downlink_Bps=link_Bps),
+                        topology=topo)
+        rt.add_node(TrackerServer(config=TrackerConfig(ping_interval_s=5.0),
+                                  topology=topo))
+        cfg = dict(work_timeout_s=600.0, status_interval_s=5.0,
+                   rechoke_interval_s=5.0, replicate_completed=True,
+                   max_replica_seeders=8)
+        origin = Agent("origin", config=AgentConfig(**cfg))
+        rt.add_node(origin)
+        # the checkpoint as a pure-replication Application: real deploys
+        # host checkpoint_application(store); the benchmark's multi-GB
+        # image stays synthetic so only metadata ever materialises
+        app = Application(app_id, "origin", app_bytes=ckpt_bytes,
+                          parts=[], swarm=True,
+                          piece_bytes=ckpt_bytes // n_pieces)
+        origin.host_app(app)
+        rcfg = dict(cfg, fetch_from=("origin",)) if origin_only else cfg
+        replicas = []
+        for nid in rep_ids:
+            a = Agent(nid, config=AgentConfig(**rcfg))
+            rt.add_node(a)
+            replicas.append(a)
+
+        died_at = None
+        if chaos:
+            # flash crowd starts; the origin dies the moment the first
+            # replica turns seeder (scenario V's failover pattern)
+            rt.run(until=until_h * H,
+                   stop_when=lambda: any(app_id in a.images
+                                         for a in replicas))
+            died_at = rt.now()
+            rt.nodes.pop("origin", None)
+        not_ready = list(replicas)
+
+        def all_ready():
+            not_ready[:] = [a for a in not_ready
+                            if app_id not in a.images]
+            return not not_ready
+
+        rt.run(until=until_h * H, stop_when=all_ready)
+        times = sorted(a.image_completed_at.get(app_id, rt.now())
+                       for a in replicas)
+        p99 = times[min(int(0.99 * (len(times) - 1)), len(times) - 1)]
+        n_ready = sum(1 for a in replicas if app_id in a.images)
+        out = {
+            "mode": "chaos" if chaos
+            else ("origin" if origin_only else "swarm"),
+            "islands": islands,
+            "ready": n_ready == n_replicas,
+            "replicas_ready": n_ready,
+            "ttr_p99_s": p99,
+            "ttr_max_s": times[-1] if times else 0.0,
+            "ttr_median_s": times[len(times) // 2] if times else 0.0,
+            "origin_egress_bytes": float(rt.tx_bytes.get("origin", 0)),
+            "cross_isp_bytes": rt.cross_isp_bytes,
+            "events": rt.events_processed,
+        }
+        if died_at is not None:
+            out["origin_died_at_s"] = died_at
+        return out
+
+    flat_origin = _one(origin_only=True, islands=0)
+    flat_swarm = _one(origin_only=False, islands=0)
+    res = {
+        "n_replicas": n_replicas,
+        "ckpt_mb": ckpt_mb,
+        "n_pieces": n_pieces,
+        "n_islands": n_islands,
+        "seed": seed,
+        "flat": {"origin": flat_origin, "swarm": flat_swarm},
+        "egress_reduction_flat": flat_origin["origin_egress_bytes"]
+        / max(flat_swarm["origin_egress_bytes"], 1.0),
+        "ttr_p99_speedup_flat": flat_origin["ttr_p99_s"]
+        / max(flat_swarm["ttr_p99_s"], 1e-9),
+    }
+    all_ready = flat_origin["ready"] and flat_swarm["ready"]
+    if include_islands:
+        isl_origin = _one(origin_only=True, islands=n_islands)
+        isl_swarm = _one(origin_only=False, islands=n_islands)
+        res["islands"] = {"origin": isl_origin, "swarm": isl_swarm}
+        res["egress_reduction_islands"] = \
+            isl_origin["origin_egress_bytes"] \
+            / max(isl_swarm["origin_egress_bytes"], 1.0)
+        res["ttr_p99_speedup_islands"] = isl_origin["ttr_p99_s"] \
+            / max(isl_swarm["ttr_p99_s"], 1e-9)
+        all_ready = all_ready and isl_origin["ready"] and isl_swarm["ready"]
+    if include_chaos:
+        chaos = _one(origin_only=False, islands=0, chaos=True)
+        res["chaos"] = chaos
+        all_ready = all_ready and chaos["ready"]
+    res["all_ready"] = all_ready
+    if verbose:
+        o, s = flat_origin, flat_swarm
+        print(f"[scenarioXI] R={n_replicas} ckpt={ckpt_mb:.0f}MB flat: "
+              f"ttr_p99 {o['ttr_p99_s']:.0f} -> {s['ttr_p99_s']:.0f}s "
+              f"(x{res['ttr_p99_speedup_flat']:.1f}) origin_egress "
+              f"{o['origin_egress_bytes'] / 1e9:.1f} -> "
+              f"{s['origin_egress_bytes'] / 1e9:.1f}GB "
+              f"(/{res['egress_reduction_flat']:.1f})")
+        if include_islands:
+            o, s = res["islands"]["origin"], res["islands"]["swarm"]
+            print(f"[scenarioXI] {n_islands} islands: ttr_p99 "
+                  f"{o['ttr_p99_s']:.0f} -> {s['ttr_p99_s']:.0f}s "
+                  f"(x{res['ttr_p99_speedup_islands']:.1f}) origin_egress "
+                  f"{o['origin_egress_bytes'] / 1e9:.1f} -> "
+                  f"{s['origin_egress_bytes'] / 1e9:.1f}GB "
+                  f"(/{res['egress_reduction_islands']:.1f})")
+        if include_chaos:
+            c = res["chaos"]
+            print(f"[scenarioXI] chaos: origin died at "
+                  f"{c['origin_died_at_s']:.0f}s, "
+                  f"{c['replicas_ready']}/{n_replicas} replicas ready "
+                  f"(all_ready={c['ready']}) ttr_p99={c['ttr_p99_s']:.0f}s")
+    return res
+
+
 ALL_TABLES = {"table1": table1, "table2": table2, "table3": table3,
               "table4": table4, "scenario_v": scenario_v,
               "scenario_vi": scenario_vi, "scenario_vii": scenario_vii,
-              "scenario_viii": scenario_viii, "scenario_ix": scenario_ix}
+              "scenario_viii": scenario_viii, "scenario_ix": scenario_ix,
+              "scenario_xi": scenario_xi}
 
 if __name__ == "__main__":
     for name, fn in ALL_TABLES.items():

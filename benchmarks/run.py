@@ -51,6 +51,15 @@ def main() -> None:
                        f"dropped={res['chaos']['dropped_msgs']} "
                        f"restarts={res['chaos']['restarts']} "
                        f"replicated={res['replicated']}")
+        elif name == "scenario_ix":
+            derived = (f"cross_isp/{res['cross_isp_reduction']:.1f} "
+                       f"p99_x{res['p99_ratio']:.2f} "
+                       f"replicated={res['replicated']}")
+        elif name == "scenario_xi":
+            derived = (f"R={res['n_replicas']} "
+                       f"egress/{res['egress_reduction_flat']:.1f} "
+                       f"ttr_p99_x{res['ttr_p99_speedup_flat']:.1f} "
+                       f"all_ready={res['all_ready']}")
         else:
             derived = (f"speedup1={res['speedup_app1']:.2f}(3.5) "
                        f"speedup2={res['speedup_app2']:.2f}(3.3)")
@@ -58,8 +67,10 @@ def main() -> None:
                      "derived": derived})
 
     # ---- framework benches --------------------------------------------- #
-    from benchmarks import kernel_bench, scheduler_bench, swarm_bench
+    from benchmarks import (checkpoint_bench, kernel_bench,
+                            scheduler_bench, swarm_bench)
     rows += swarm_bench.bench()
+    rows += checkpoint_bench.bench()
     rows += scheduler_bench.bench()
     rows += kernel_bench.bench()
 

@@ -176,6 +176,67 @@ def bench_scenario_ix(verbose: bool = True, n_volunteers: int = 500,
     return rows
 
 
+def bench_scenario_xi(verbose: bool = True, n_replicas: int = 50,
+                      ckpt_mb: float = 2048.0, n_islands: int = 8,
+                      n_pieces: int = 128):
+    """Scenario XI (swarm-served checkpoints) as perf-trajectory rows:
+    replica cold-start flash crowd, origin-only vs swarm on flat and
+    island topologies, one row per (mode, topology) so bench_guard
+    tracks `ttr_p99_s` and `origin_egress_bytes` independently, plus a
+    summary row with the reduction ratios and the origin-death chaos
+    verdict."""
+    from benchmarks.paper_tables import scenario_xi
+    res = scenario_xi(verbose=False, n_replicas=n_replicas,
+                      ckpt_mb=ckpt_mb, n_islands=n_islands,
+                      n_pieces=n_pieces)
+    rows = []
+    topos = [("flat", res["flat"])]
+    if "islands" in res:
+        topos.append((f"isl{n_islands}", res["islands"]))
+    for tag, pair in topos:
+        for mode in ("origin", "swarm"):
+            m = pair[mode]
+            rows.append({
+                "name": f"ckpt_flashcrowd_{mode}_r{n_replicas}_{tag}",
+                "us_per_call": 0.0,
+                "derived": (f"ttr_p99 {m['ttr_p99_s']:.0f}s max "
+                            f"{m['ttr_max_s']:.0f}s origin_egress "
+                            f"{m['origin_egress_bytes'] / 1e9:.2f}GB "
+                            f"ready {m['replicas_ready']}/{n_replicas}"),
+                "metrics": {"n_replicas": n_replicas, "ckpt_mb": ckpt_mb,
+                            **{k: m[k] for k in
+                               ("ttr_p99_s", "ttr_max_s", "ttr_median_s",
+                                "origin_egress_bytes", "cross_isp_bytes",
+                                "ready", "replicas_ready", "events")}},
+            })
+    summary = {"ckpt_mb": ckpt_mb,
+               "egress_reduction_flat": res["egress_reduction_flat"],
+               "ttr_p99_speedup_flat": res["ttr_p99_speedup_flat"],
+               "all_ready": res["all_ready"]}
+    if "islands" in res:
+        summary["egress_reduction_islands"] = \
+            res["egress_reduction_islands"]
+        summary["ttr_p99_speedup_islands"] = \
+            res["ttr_p99_speedup_islands"]
+    if "chaos" in res:
+        summary["chaos_ready"] = res["chaos"]["ready"]
+        summary["chaos_origin_died_at_s"] = \
+            res["chaos"]["origin_died_at_s"]
+    rows.append({
+        "name": f"ckpt_flashcrowd_summary_r{n_replicas}",
+        "us_per_call": 0.0,
+        "derived": (f"flat: egress /{res['egress_reduction_flat']:.1f} "
+                    f"ttr_p99 x{res['ttr_p99_speedup_flat']:.1f} | "
+                    f"chaos_ready={summary.get('chaos_ready')} "
+                    f"all_ready={res['all_ready']}"),
+        "metrics": summary,
+    })
+    if verbose:
+        for r in rows:
+            print(f"[swarm] {r['name']}: {r['derived']}")
+    return rows
+
+
 def bench_sweep(ns, verbose: bool = True, backend=None,
                 tick_s: float = 0.5):
     """N-sweep of the *batched* array-native Scenario VII: one row per N
@@ -281,6 +342,14 @@ def bench(verbose: bool = True, smoke: bool = False):
                                   n_islands=4, image_mb=8.0)
     else:
         rows += bench_scenario_ix(verbose=verbose)
+    # Scenario XI (swarm-served checkpoints): smoke runs the CI-sized
+    # R=8/256MB flash crowd, the full bench the headline R=50/2GB one
+    if smoke:
+        rows += bench_scenario_xi(verbose=verbose, n_replicas=8,
+                                  ckpt_mb=256.0, n_islands=4,
+                                  n_pieces=64)
+    else:
+        rows += bench_scenario_xi(verbose=verbose)
     # pump micro-benchmark: the ≥10x incremental-vs-reference ratio is the
     # acceptance gate for the bookkeeping rewrite
     rows += exchange_bench.bench(verbose=verbose, smoke=smoke)
@@ -309,7 +378,22 @@ def main(argv=None) -> None:
                          "volunteers over K islands (e.g. 500,8 or the "
                          "CI smoke 64,4); with --json, rows are merged "
                          "into the file by name")
+    ap.add_argument("--scenario-xi", metavar="R,MB",
+                    help="run ONLY Scenario XI (checkpoint flash crowd) "
+                         "at R replicas pulling an MB-sized checkpoint "
+                         "(e.g. 50,2048 or the CI smoke 8,256); with "
+                         "--json, rows are merged into the file by name")
     args = ap.parse_args(argv)
+    if args.scenario_xi:
+        r, mb = (int(x) for x in args.scenario_xi.split(","))
+        rows = bench_scenario_xi(n_replicas=r, ckpt_mb=float(mb),
+                                 n_islands=4 if r <= 16 else 8,
+                                 n_pieces=64 if r <= 16 else 128)
+        if args.json:
+            merge_rows(args.json, rows)
+            print(f"[swarm] merged {len(rows)} scenario-xi rows "
+                  f"into {args.json}")
+        return
     if args.scenario_ix:
         n, k = (int(x) for x in args.scenario_ix.split(","))
         rows = bench_scenario_ix(n_volunteers=n, n_islands=k,

@@ -11,6 +11,13 @@ every other pod receives pieces over the interconnect via
 parallel/weight_torrent (ppermute ring) or host-side via core/swarm's
 rarest-first plan.  `async_save` runs serialisation off-thread so the train
 loop never blocks (the step's arrays are snapshotted to host first).
+
+Every committed step also carries `swarm.json`: a `PieceManifest` (the
+torrent metainfo) over the step's canonical *image* — manifest.json plus
+the piece files packed into one byte stream by `pack_step_image` — so a
+checkpoint can be advertised to the volunteer swarm as a regular
+piece-wise Application and serving replicas can cold-start from peers
+(`checkpoint/swarm_restore.py`) instead of hammering this store.
 """
 from __future__ import annotations
 
@@ -23,6 +30,65 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+from repro.core.workunit import PieceManifest
+
+# canonical step-image framing: magic + json file table + file bytes
+IMAGE_MAGIC = b"CKPTIMG1\n"
+
+
+def _image_files(d: str) -> List[str]:
+    """Canonical file order for a step's swarm image: the tree manifest
+    first, then the payload pieces (COMMITTED and swarm.json are framing,
+    not content, and stay out of the image)."""
+    pieces = sorted(fn for fn in os.listdir(d)
+                    if fn.startswith("piece_") and fn.endswith(".npz"))
+    return ["manifest.json"] + pieces
+
+
+def pack_step_image(d: str) -> bytes:
+    """Pack a committed step directory into the canonical image bytes the
+    swarm manifest hashes: magic, a json file table, then the files'
+    bytes concatenated in table order."""
+    files = _image_files(d)
+    blobs = []
+    table = []
+    for fn in files:
+        with open(os.path.join(d, fn), "rb") as f:
+            b = f.read()
+        table.append({"name": fn, "size": len(b)})
+        blobs.append(b)
+    header = json.dumps({"files": table}, sort_keys=True).encode() + b"\n"
+    return IMAGE_MAGIC + header + b"".join(blobs)
+
+
+def unpack_step_image(image, dest_dir: str) -> List[str]:
+    """Inverse of `pack_step_image`: write the step's files into
+    `dest_dir` (plus a fresh COMMITTED marker) and return the file names.
+    Callers verify the image against its PieceManifest *before* calling
+    this — the framing here is trusted only after the content re-hash."""
+    mv = memoryview(image)
+    if bytes(mv[:len(IMAGE_MAGIC)]) != IMAGE_MAGIC:
+        raise ValueError("not a checkpoint step image (bad magic)")
+    ofs = len(IMAGE_MAGIC)
+    end = ofs
+    while end < len(mv) and mv[end] != 0x0A:        # newline-terminated
+        end += 1
+    header = json.loads(bytes(mv[ofs:end]).decode())
+    ofs = end + 1
+    os.makedirs(dest_dir, exist_ok=True)
+    names = []
+    for ent in header["files"]:
+        n = int(ent["size"])
+        with open(os.path.join(dest_dir, ent["name"]), "wb") as f:
+            f.write(mv[ofs:ofs + n])
+        ofs += n
+        names.append(ent["name"])
+    if ofs != len(mv):
+        raise ValueError("trailing bytes after the declared file table")
+    with open(os.path.join(dest_dir, "COMMITTED"), "w") as f:
+        f.write(str(time.time()))
+    return names
 
 
 def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
@@ -37,11 +103,18 @@ def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
 
 class CheckpointStore:
     def __init__(self, root: str, piece_bytes: int = 64 << 20,
-                 keep_last: int = 3):
+                 keep_last: int = 3, swarm_piece_bytes: int = 4 << 20):
         self.root = root
         self.piece_bytes = piece_bytes
         self.keep_last = keep_last
+        # granularity of the *swarm* manifest over the packed step image;
+        # smaller than the I/O piece size so a flash crowd of replicas
+        # disperses across many holders instead of queueing on whole shards
+        self.swarm_piece_bytes = swarm_piece_bytes
         os.makedirs(root, exist_ok=True)
+
+    def step_dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step:08d}")
 
     # ------------------------------------------------------------------ #
     def save(self, step: int, tree, extra: Optional[dict] = None) -> str:
@@ -71,6 +144,17 @@ class CheckpointStore:
             manifest["pieces"].append(piece_idx)
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
+        # emit the swarm metainfo: a PieceManifest (content-hashed, like a
+        # .torrent) over the step's canonical packed image, so replicas
+        # can join the distribution swarm straight off the step directory
+        pm = PieceManifest.from_bytes(self.swarm_app_id(step),
+                                      pack_step_image(tmp),
+                                      self.swarm_piece_bytes)
+        with open(os.path.join(tmp, "swarm.json"), "w") as f:
+            json.dump({"app_id": pm.app_id, "piece_bytes": pm.piece_bytes,
+                       "total_bytes": pm.total_bytes,
+                       "piece_hashes": list(pm.piece_hashes),
+                       "manifest_hash": pm.manifest_hash}, f)
         with open(os.path.join(tmp, "COMMITTED"), "w") as f:
             f.write(str(time.time()))
         if os.path.isdir(d):
@@ -78,6 +162,37 @@ class CheckpointStore:
         os.rename(tmp, d)
         self._gc()
         return d
+
+    # ------------------------------------------------------------------ #
+    def swarm_app_id(self, step: int) -> str:
+        """The Application id a step is advertised under in the swarm."""
+        return f"ckpt-{os.path.basename(os.path.normpath(self.root))}" \
+               f"-step{step:08d}"
+
+    def pack_image(self, step: Optional[int] = None) -> bytes:
+        """The committed step's canonical swarm image bytes."""
+        step = step if step is not None else self.latest_step()
+        assert step is not None, "no committed checkpoint found"
+        return pack_step_image(self.step_dir(step))
+
+    def swarm_manifest(self, step: Optional[int] = None) -> PieceManifest:
+        """The PieceManifest `save` emitted for a committed step
+        (rebuilt from the files for pre-swarm.json step dirs)."""
+        step = step if step is not None else self.latest_step()
+        assert step is not None, "no committed checkpoint found"
+        path = os.path.join(self.step_dir(step), "swarm.json")
+        if not os.path.exists(path):
+            return PieceManifest.from_bytes(self.swarm_app_id(step),
+                                            self.pack_image(step),
+                                            self.swarm_piece_bytes)
+        with open(path) as f:
+            doc = json.load(f)
+        pm = PieceManifest(doc["app_id"], int(doc["piece_bytes"]),
+                           int(doc["total_bytes"]),
+                           tuple(doc["piece_hashes"]), content_hashed=True)
+        assert pm.manifest_hash == doc["manifest_hash"], \
+            "swarm.json does not match its own metainfo"
+        return pm
 
     def _gc(self) -> None:
         steps = self.steps()

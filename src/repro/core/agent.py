@@ -99,6 +99,11 @@ class AgentConfig:
     # per-seeder bookkeeping and gossip stay O(cap), not O(N).  Piece
     # serving is unaffected — completed nodes keep answering PIECE_REQs.
     max_replica_seeders: Optional[int] = None
+    # restrict PIECE_REQs to these peers (scalar engine only): the
+    # origin-only baseline of the checkpoint cold-start benchmarks, where
+    # every replica pulls straight from the blob-store stand-in instead
+    # of exchanging pieces.  () keeps normal swarm-wide selection.
+    fetch_from: tuple = ()
 
 
 class Agent(Node):

@@ -513,6 +513,11 @@ class PieceExchange:
                     pool.add(peer)
             pool.discard(self.node_id)
             pool -= self.bad_peers.get(app_id, set())
+            if self.cfg.fetch_from:
+                # origin-only mode: the whole request plane collapses to
+                # the allow-listed peers (interest, pump and endgame all
+                # draw their candidates from this pool or _holders)
+                pool &= set(self.cfg.fetch_from)
             self._pool_cache[app_id] = pool
         return pool
 
@@ -529,6 +534,8 @@ class PieceExchange:
         bad = self.bad_peers.get(app_id)
         if bad:
             cands -= bad
+        if self.cfg.fetch_from:
+            cands &= set(self.cfg.fetch_from)
         return sorted(cands)
 
     def _holders_naive(self, app_id: str, piece_id: int) -> List[str]:
@@ -542,6 +549,8 @@ class PieceExchange:
                 pool.add(peer)
         pool.discard(self.node_id)
         pool -= self.bad_peers.get(app_id, set())
+        if self.cfg.fetch_from:
+            pool &= set(self.cfg.fetch_from)
         return sorted(p for p in pool
                       if p in full or (by_peer.get(p, 0) >> piece_id) & 1)
 

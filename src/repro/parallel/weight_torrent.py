@@ -122,3 +122,25 @@ def broadcast_cost_model(bytes_total: float, n_pods: int,
     naive_s = bytes_total * (n_pods - 1) / link_Bps
     return {"torrent_s": torrent_s, "naive_s": naive_s,
             "speedup": naive_s / max(torrent_s, 1e-12)}
+
+
+def cold_start_cost_model(bytes_total: float, n_replicas: int,
+                          link_Bps: float = 12.5e6,
+                          n_pieces: int = 128) -> dict:
+    """Analytic replica cold-start: origin-only vs swarm flash crowd.
+
+    Origin-only serialises R full images through the origin's uplink
+    (time ~ R * bytes / link, origin egress R * bytes).  A piece-wise
+    swarm needs the origin to upload each piece roughly once; the last
+    replica finishes after its own download plus the pipeline ramp of
+    ~log2(R) piece-times, and origin egress collapses to ~1 image —
+    the bounds Scenario XI's simulated runs should approach.
+    """
+    piece_s = bytes_total / max(n_pieces, 1) / link_Bps
+    origin_s = n_replicas * bytes_total / link_Bps
+    swarm_s = bytes_total / link_Bps \
+        + piece_s * max(1, n_replicas).bit_length()
+    return {"origin_s": origin_s, "swarm_s": swarm_s,
+            "origin_egress_bytes": n_replicas * bytes_total,
+            "swarm_origin_egress_bytes": bytes_total,
+            "speedup": origin_s / max(swarm_s, 1e-12)}

@@ -56,6 +56,9 @@ class ServingEngine:
         self.sc = sc
         self.mesh = mesh
         self.params = params
+        # checkpoint `extra` dict when this engine cold-started from the
+        # swarm (from_swarm); None for directly-constructed engines
+        self.restore_extra: Optional[dict] = None
         self.rules = infer_rules(cfg)
         self.queue: collections.deque = collections.deque()
         self.active: Dict[int, Request] = {}
@@ -68,6 +71,31 @@ class ServingEngine:
         self._next_id = 0
 
     # ------------------------------------------------------------------ #
+    @classmethod
+    def from_swarm(cls, cfg: ModelConfig, template, sc: ServeConfig, *,
+                   agent, app_id: str, mesh=None, pod_axis: str = "pod",
+                   workdir=None) -> "ServingEngine":
+        """Cold-start a replica from the distribution swarm.
+
+        The replica's `agent` leeched the checkpoint Application like any
+        other volunteer; the moment its piece set completes
+        (`app_id in agent.images`) this reassembles the step image,
+        re-hashes its content against the manifest, restores the params
+        into `template`'s structure, and — when a mesh with a pod axis is
+        given — fans the freshly-landed bytes out intra-pod over the
+        `weight_torrent` ppermute ring, so only one host per pod pulls
+        from the swarm.  Raises if the piece set is still incomplete.
+        """
+        from repro.checkpoint.swarm_restore import restore_from_agent
+        params, extra = restore_from_agent(agent, app_id, template,
+                                           workdir=workdir)
+        if mesh is not None and pod_axis in getattr(mesh, "shape", {}):
+            from repro.parallel.weight_torrent import torrent_broadcast
+            params = torrent_broadcast(params, mesh, axis=pod_axis)
+        eng = cls(cfg, params, sc, mesh=mesh)
+        eng.restore_extra = extra
+        return eng
+
     def _init_cache(self):
         tree = M.cache_specs_tree(self.cfg, self.sc.slots, self.sc.max_len)
         self.caches = init_params(jax.random.PRNGKey(0), tree)

@@ -10,7 +10,8 @@ if not _HAVE_JAX:
     # the fast protocol CI job installs no jax: keep pytest from even
     # importing the jax-marked modules at collection time (-m deselection
     # alone still imports them and dies on the ImportError)
-    collect_ignore = ["test_infra.py", "test_kernels.py", "test_models.py",
+    collect_ignore = ["test_checkpoint_swarm.py", "test_infra.py",
+                      "test_kernels.py", "test_models.py",
                       "test_parallel.py", "test_serving.py",
                       "test_trainer.py"]
 

@@ -240,6 +240,65 @@ def test_crash_restart_rescans_piece_cache(tmp_path):
     assert v0.px.assembled_image("app") == image
 
 
+# ---------- checkpoint flash crowd: crash-restart + origin death -------- #
+def test_checkpoint_crowd_survives_replica_crash_and_origin_death(tmp_path):
+    """The Scenario XI chaos overlay in miniature: replicas cold-start
+    from a zero-part (pure replication) checkpoint app; one replica
+    crashes mid-restore and resumes from its on-disk piece cache, the
+    origin dies once the swarm is self-sufficient, and every replica
+    still reaches ready (complete verified piece set)."""
+    from repro.core import Application
+
+    incarnations = []
+
+    def mk_r0():
+        a = Agent("R0", config=AgentConfig(
+            work_timeout_s=60.0, status_interval_s=0.5, piece_timeout_s=3.0,
+            replicate_completed=True, root_dir=str(tmp_path)))
+        incarnations.append(a)
+        return a
+
+    rt = SimRuntime(link=LinkModel(uplink_Bps=2.5e6, downlink_Bps=2.5e6))
+    rt.add_node(TrackerServer(config=TrackerConfig(ping_interval_s=1.0)))
+    cfg = dict(work_timeout_s=60.0, status_interval_s=0.5,
+               piece_timeout_s=3.0, replicate_completed=True)
+    origin = Agent("origin", config=AgentConfig(**cfg))
+    rt.add_node(origin)
+    image = bytes((i * 89 + 17) % 256 for i in range(256_000))
+    app = Application("ckpt", "origin", app_bytes=len(image), parts=[],
+                      swarm=True, piece_bytes=len(image) // 16, image=image)
+    origin.host_app(app)
+    rt.add_node(mk_r0())
+    rt.restart_factory["R0"] = mk_r0
+    others = [Agent(f"R{i}", config=AgentConfig(**cfg)) for i in (1, 2)]
+    for a in others:
+        rt.add_node(a)
+    # crash R0 once it holds a partial piece set
+    rt.run(until=600, stop_when=lambda: len(
+        incarnations[0].px.inventories.get("ckpt").have) >= 4
+        if incarnations[0].px.inventories.get("ckpt") else False)
+    cached = len(incarnations[0].px.inventories["ckpt"].have)
+    assert 4 <= cached < 16
+    rt.crash("R0")
+    # origin dies the moment any surviving replica is ready: the rest of
+    # the crowd (including the restarted R0) must finish peer-to-peer
+    rt.run(until=rt.now() + 600,
+           stop_when=lambda: any("ckpt" in a.images for a in others))
+    rt.nodes.pop("origin", None)
+    rt.restart("R0")
+    rt.run(until=rt.now() + 600,
+           stop_when=lambda: "ckpt" in incarnations[-1].images
+           and all("ckpt" in a.images for a in others))
+    r0 = incarnations[-1]
+    assert r0 is not incarnations[0]
+    assert all("ckpt" in a.images for a in [r0] + others)
+    # the cache resume did real work: R0's refetch skipped held pieces
+    assert sum(r0.px.pieces_from["ckpt"].values()) <= 16 - cached
+    # ready means bytes: every replica reassembles the exact image
+    for a in [r0] + others:
+        assert a.px.assembled_image("ckpt") == image
+
+
 # --------------- tracker: silent-death row re-verification -------------- #
 def test_tracker_reverifies_rows_and_reelects_host():
     sent = []

@@ -9,13 +9,14 @@ pytestmark = pytest.mark.jax_slow
 
 from jax.experimental.pallas import tpu as pltpu
 
-# Older jax (<=0.4.37) ships TPUCompilerParams only; the kernels use the
-# renamed pltpu.CompilerParams, so on such images the Pallas paths cannot
-# build.  Skip (not fail) those cases; jnp twins still validate the math.
-_HAS_PALLAS_COMPILER_PARAMS = hasattr(pltpu, "CompilerParams")
+# The kernels fall back to the old pltpu.TPUCompilerParams spelling when
+# the renamed CompilerParams is absent (jax <=0.4.37), so the Pallas paths
+# build on both spellings; skip only if pallas exposes neither.
+_HAS_PALLAS_COMPILER_PARAMS = (hasattr(pltpu, "CompilerParams")
+                               or hasattr(pltpu, "TPUCompilerParams"))
 needs_pallas = pytest.mark.skipif(
     not _HAS_PALLAS_COMPILER_PARAMS,
-    reason="pallas lacks CompilerParams on this jax version")
+    reason="pallas lacks CompilerParams/TPUCompilerParams on this jax")
 
 from repro.kernels.flash_attention.kernel import flash_fwd_pallas
 from repro.kernels.flash_attention.ops import flash_attention
