@@ -13,7 +13,11 @@ meaningfully slower:
     (the Scenario IX P4P economics; virtual-time, machine-independent), or
   * a checkpoint flash-crowd row's p99 time-to-ready (``ttr_p99_s``) or
     origin egress (``origin_egress_bytes``) regressed past the same
-    bands (the Scenario XI swarm-served-checkpoint economics).
+    bands (the Scenario XI swarm-served-checkpoint economics), or
+  * a delta-upgrade row's total wire bytes (``upgrade_traffic_bytes``)
+    or convergence time (``upgrade_makespan_s``) regressed past the same
+    bands (the Scenario X versioned-manifest economics; zero-baseline
+    rows are skipped like every other key).
 
 Only rows present in BOTH files are compared (a CI smoke sweep that
 stops at N=500 is judged against the matching baseline rows only), so
@@ -49,7 +53,9 @@ def check(baseline_path: str, current_path: str, evps_drop: float = 0.20,
                 ("p99_completion_s", makespan_drift, False),
                 ("cross_isp_bytes", cross_isp_drift, False),
                 ("ttr_p99_s", makespan_drift, False),
-                ("origin_egress_bytes", cross_isp_drift, False)):
+                ("origin_egress_bytes", cross_isp_drift, False),
+                ("upgrade_traffic_bytes", cross_isp_drift, False),
+                ("upgrade_makespan_s", makespan_drift, False)):
             if key not in b or key not in c:
                 continue
             bv, cv = float(b[key]), float(c[key])
@@ -69,7 +75,7 @@ def check(baseline_path: str, current_path: str, evps_drop: float = 0.20,
         # correctness riding along: a run that stopped replicating is a
         # regression no matter how fast it got
         for key in ("done", "replicated", "ready", "all_ready",
-                    "chaos_ready"):
+                    "chaos_ready", "upgraded", "no_stale"):
             if b.get(key) is True and c.get(key) is not True:
                 failures.append((name, key, True, c.get(key)))
     if verbose:

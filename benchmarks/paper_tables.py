@@ -695,6 +695,338 @@ def scenario_ix(verbose: bool = True, n_volunteers: int = 500,
     return res
 
 
+def scenario_x(verbose: bool = True, n_volunteers: int = 200,
+               image_mb: float = 64.0, n_pieces: int = 128,
+               delta_frac: float = 0.05, uplink_mbps: float = 100.0,
+               until_h: float = 8.0, tick_s: float = 0.5, seed: int = 10,
+               batched: bool = True, backend: Optional[str] = None,
+               include_chaos: bool = True, chaos_volunteers: int = 48,
+               chaos_churn: float = 0.30, chaos_loss: float = 0.05,
+               chaos_image_mb: float = 4.0, chaos_pieces: int = 32) -> dict:
+    """Scenario X: versioned-manifest delta distribution (image upgrades).
+
+    A swarm of N volunteers holds revision v1 of a 64 MB image; the host
+    publishes v2 with `delta_frac` of the pieces changed (a versioned
+    `PieceManifest` chained by `prev_manifest_hash`).  Volunteers carry
+    over their unchanged verified pieces (`PieceInventory.seed_from`) and
+    fetch only the delta, against a *scratch* baseline that redistributes
+    the full image to the same swarm under a fresh app id.  Headline
+    metrics: **upgrade_traffic_bytes** (total bytes on the wire, every
+    sender counted) and **upgrade_makespan_s** — target >=10x less than
+    scratch on both.
+
+    Chaos overlay: a smaller swarm with REAL image bytes (the reuse rule
+    re-hashes every carried-over piece) upgrades while `chaos_churn` of
+    the volunteers crash around the publish — half resume with stale v1
+    memory (the mixed-version announce case), half restart as fresh
+    incarnations off the on-disk piece cache.  Asserted, not measured: no
+    engine ever accepts a version-mismatched piece (`stale_accepts == 0`)
+    and every survivor converges byte-identical to v2.
+    """
+    import random as _random
+    import time as _time
+
+    from repro.core.runtime import LinkModel
+    from repro.core.workunit import Application, PieceManifest
+
+    image_bytes = int(image_mb * 1e6)
+    piece_bytes = image_bytes // n_pieces
+    n_changed = max(1, int(round(delta_frac * n_pieces)))
+    app_id = "appx"
+    vol_ids = [f"V{i:03d}" for i in range(n_volunteers)]
+    link_Bps = uplink_mbps * 1e6 / 8
+
+    hub = None
+    if batched:
+        from repro.core.swarm_arrays import SwarmHub
+        hub = SwarmHub(backend=backend)
+    rt = SimRuntime(link=LinkModel(uplink_Bps=link_Bps,
+                                   downlink_Bps=link_Bps))
+    if hub is not None:
+        rt.crash_hooks.append(hub.node_gone)
+    rt.add_node(TrackerServer(config=TrackerConfig(ping_interval_s=5.0)))
+    # upload_slots=8 / rechoke=15s: enough parallel unchoke capacity that
+    # the 6-piece delta fetch isn't serialized behind the grant scheduler,
+    # and rechoke churn doesn't reshuffle holders mid-delta.  Shared by
+    # BOTH the upgrade arm and the scratch baseline so the comparison
+    # stays apples-to-apples.
+    cfg = dict(work_timeout_s=600.0, status_interval_s=5.0,
+               rechoke_interval_s=15.0, replicate_completed=True,
+               max_replica_seeders=8, upload_slots=8)
+    origin = Agent("origin", config=AgentConfig(**cfg), hub=hub)
+    rt.add_node(origin)
+    app = Application(app_id, "origin", app_bytes=image_bytes, parts=[],
+                      swarm=True, piece_bytes=piece_bytes)
+    origin.host_app(app)
+    agents = []
+    for nid in vol_ids:
+        a = Agent(nid, config=AgentConfig(**cfg), hub=hub)
+        rt.add_node(a)
+        agents.append(a)
+
+    def _run(stop) -> None:
+        if hub is not None:
+            rt.run_batched(until=until_h * H, stop_when=stop,
+                           tick_s=tick_s, on_tick=hub.tick)
+        else:
+            rt.run(until=until_h * H, stop_when=stop)
+
+    def _tx() -> float:
+        return float(sum(rt.tx_bytes.values()))
+
+    t0 = _time.perf_counter()
+    # phase 1 — v1 flash crowd: the pre-existing swarm state every
+    # upgrade starts from
+    m1 = app.ensure_manifest()
+    not_done = list(agents)
+
+    def v1_done():
+        not_done[:] = [a for a in not_done if app_id not in a.images]
+        return not not_done
+
+    _run(v1_done)
+    v1_makespan = rt.now()
+    v1_traffic = _tx()
+
+    # phase 2 — the host publishes v2: delta_frac of the pieces changed,
+    # manifest chained to v1; volunteers reuse the rest
+    rng = _random.Random(seed)
+    changed = set(rng.sample(range(n_pieces), n_changed))
+    m2 = PieceManifest.synthetic(app_id, image_bytes, piece_bytes,
+                                 version=2, prev=m1, changed=changed)
+    t_pub, b_pub = rt.now(), _tx()
+    assert origin.publish_update(app_id, m2), "v2 must supersede v1"
+    not_up = list(agents)
+
+    def upgraded():
+        not_up[:] = [a for a in not_up
+                     if a.images.get(app_id) != m2.manifest_hash]
+        return not not_up
+
+    _run(upgraded)
+    upgrade_makespan = rt.now() - t_pub
+    upgrade_traffic = _tx() - b_pub
+    engines = [a.px for a in agents] + [origin.px]
+    reused = sum(px.reused_pieces for px in engines)
+    stale_accepts = sum(px.stale_accepts for px in engines)
+    on_v2 = sum(1 for a in agents
+                if a.images.get(app_id) == m2.manifest_hash)
+
+    # phase 3 — scratch baseline: the same swarm pulls the same 64 MB as
+    # a brand-new app (what redistribution without versioned manifests
+    # costs)
+    scratch_id = "appx-scratch"
+    scratch = Application(scratch_id, "origin", app_bytes=image_bytes,
+                          parts=[], swarm=True, piece_bytes=piece_bytes)
+    t_s, b_s = rt.now(), _tx()
+    origin.host_app(scratch)
+    not_s = list(agents)
+
+    def scratch_done():
+        not_s[:] = [a for a in not_s if scratch_id not in a.images]
+        return not not_s
+
+    _run(scratch_done)
+    scratch_makespan = rt.now() - t_s
+    scratch_traffic = _tx() - b_s
+    wall_s = max(_time.perf_counter() - t0, 1e-9)
+
+    res = {
+        "n_volunteers": n_volunteers,
+        "image_mb": image_mb,
+        "n_pieces": n_pieces,
+        "n_changed": n_changed,
+        "delta_frac": delta_frac,
+        "seed": seed,
+        "batched": batched,
+        "v1_makespan_s": v1_makespan,
+        "v1_traffic_bytes": v1_traffic,
+        "upgrade_makespan_s": upgrade_makespan,
+        "upgrade_traffic_bytes": upgrade_traffic,
+        "scratch_makespan_s": scratch_makespan,
+        "scratch_traffic_bytes": scratch_traffic,
+        "traffic_reduction": scratch_traffic / max(upgrade_traffic, 1.0),
+        "makespan_speedup": scratch_makespan / max(upgrade_makespan, 1e-9),
+        "reused_pieces": reused,
+        "upgraded": on_v2 == n_volunteers,
+        "replicated": (on_v2 == n_volunteers
+                       and len(not_done) == 0 and len(not_s) == 0),
+        "no_stale": stale_accepts == 0,
+        "stale_accepts": stale_accepts,
+        "wall_s": wall_s,
+    }
+    if hub is not None:
+        res["backend"] = hub.backend
+    if include_chaos:
+        res["chaos"] = _scenario_x_chaos(
+            n_volunteers=chaos_volunteers, image_mb=chaos_image_mb,
+            n_pieces=chaos_pieces, delta_frac=delta_frac,
+            churn=chaos_churn, loss=chaos_loss, seed=seed,
+            uplink_mbps=uplink_mbps, until_h=until_h)
+        res["chaos_ready"] = res["chaos"]["converged"]
+        res["no_stale"] = res["no_stale"] and res["chaos"]["no_stale"]
+    if verbose:
+        print(f"[scenarioX] N={n_volunteers} img={image_mb:.0f}MB "
+              f"delta={n_changed}/{n_pieces} pieces: upgrade "
+              f"{upgrade_traffic / 1e6:.0f}MB/{upgrade_makespan:.0f}s vs "
+              f"scratch {scratch_traffic / 1e6:.0f}MB/"
+              f"{scratch_makespan:.0f}s "
+              f"(/{res['traffic_reduction']:.1f} traffic, "
+              f"x{res['makespan_speedup']:.1f} makespan) "
+              f"reused={reused} stale_accepts={stale_accepts}")
+        if include_chaos:
+            c = res["chaos"]
+            print(f"[scenarioX] chaos churn={chaos_churn:.0%}: "
+                  f"converged={c['converged']} reused={c['reused_pieces']} "
+                  f"demoted={c['stale_have_demoted']} "
+                  f"stale_data={c['stale_piece_data']} "
+                  f"refused={c['stale_reqs_refused']} "
+                  f"stale_accepts={c['stale_accepts']}")
+    return res
+
+
+def _scenario_x_chaos(n_volunteers: int = 48, image_mb: float = 4.0,
+                      n_pieces: int = 32, delta_frac: float = 0.05,
+                      churn: float = 0.30, loss: float = 0.05,
+                      seed: int = 10, uplink_mbps: float = 100.0,
+                      until_h: float = 8.0) -> dict:
+    """Scenario X chaos overlay: upgrade during churn, REAL image bytes.
+
+    Run scalar (per-message) so every version gate fires on the wire
+    path.  Crash `churn` of the volunteers around the publish: half
+    resume with their v1 state intact (they re-announce stale v1 masks
+    the upgraded swarm must demote), half restart as fresh incarnations
+    whose only v1 remnant is the on-disk piece cache (reused only after
+    the content re-hash).  Asserts convergence to byte-identical v2 and
+    the mixed-version tripwire `stale_accepts == 0`.
+    """
+    import random as _random
+    import shutil
+    import tempfile
+
+    from repro.core.faults import FaultPlan, LinkFault
+    from repro.core.runtime import LinkModel
+    from repro.core.workunit import Application, PieceManifest
+
+    image_bytes = int(image_mb * 1e6)
+    piece_bytes = image_bytes // n_pieces
+    n_changed = max(1, int(round(delta_frac * n_pieces)))
+    app_id = "appx-chaos"
+    vol_ids = [f"C{i:02d}" for i in range(n_volunteers)]
+    link_Bps = uplink_mbps * 1e6 / 8
+    rng = _random.Random(seed + 1)
+    root = tempfile.mkdtemp(prefix="scenario_x_chaos_")
+    try:
+        rt = SimRuntime(
+            link=LinkModel(uplink_Bps=link_Bps, downlink_Bps=link_Bps),
+            faults=FaultPlan(seed=seed + 1,
+                             link=LinkFault(drop_p=loss, dup_p=0.02,
+                                            jitter_s=0.2)))
+        rt.add_node(TrackerServer(config=TrackerConfig(ping_interval_s=2.0)))
+        cfg = dict(work_timeout_s=10.0, status_interval_s=1.0,
+                   rechoke_interval_s=5.0, piece_timeout_s=5.0,
+                   reregister_s=15.0, gossip_interval_s=5.0,
+                   replicate_completed=True, root_dir=root)
+        engines = []
+
+        def mk(nid: str) -> Agent:
+            a = Agent(nid, config=AgentConfig(**cfg))
+            engines.append(a.px)
+            return a
+
+        origin = mk("origin")
+        rt.add_node(origin)
+        image1 = bytes((i * 89 + 17) % 256 for i in range(image_bytes))
+        app = Application(app_id, "origin", app_bytes=image_bytes,
+                          parts=[], swarm=True, piece_bytes=piece_bytes,
+                          image=image1)
+        origin.host_app(app)
+        agents = {}
+        for nid in vol_ids:
+            agents[nid] = mk(nid)
+            rt.add_node(agents[nid])
+        m1 = app.ensure_manifest()
+
+        not_done = list(vol_ids)
+
+        def v1_done():
+            not_done[:] = [n for n in not_done
+                           if app_id not in rt.nodes[n].images]
+            return not not_done
+
+        rt.run(until=until_h * H, stop_when=v1_done)
+        assert not not_done, "chaos overlay: v1 never fully replicated"
+
+        # v2 image: flip one byte in each changed piece
+        changed = set(rng.sample(range(n_pieces), n_changed))
+        image2 = bytearray(image1)
+        for pid in changed:
+            image2[pid * piece_bytes] ^= 0xFF
+        image2 = bytes(image2)
+        m2 = PieceManifest.from_bytes(app_id, image2, piece_bytes,
+                                      version=2, prev=m1)
+        assert m2.delta(m1) == changed, "delta must match the edit set"
+
+        # churn around the publish: crash before it (so the victims miss
+        # the MANIFEST_UPDATE), restart shortly after.  Suspend/resume
+        # victims come back holding complete v1 state in memory — the
+        # stale-mask announce case; fresh-incarnation victims come back
+        # empty except the on-disk v1 piece cache.
+        t_pub = rt.now() + 5.0
+        victims = rng.sample(vol_ids, int(round(churn * n_volunteers)))
+        for k, nid in enumerate(victims):
+            if k % 2 == 0:
+                rt.restart_factory[nid] = lambda n=nid: mk(n)
+            else:
+                rt.restart_factory.pop(nid, None)   # suspend/resume
+            rt._at(rng.uniform(rt.now(), t_pub), rt.crash, (nid,))
+            rt._at(t_pub + rng.uniform(1.0, 10.0), rt.restart, (nid,))
+        rt.run(until=t_pub, stop_when=lambda: False)
+        assert origin.publish_update(app_id, m2, image=image2)
+
+        def converged():
+            for nid in vol_ids:
+                node = rt.nodes.get(nid)
+                if node is None or \
+                        node.images.get(app_id) != m2.manifest_hash:
+                    return False
+            return True
+
+        rt.run(until=until_h * H, stop_when=converged)
+        ok = converged()
+        byte_identical = ok and all(
+            rt.nodes[nid].px.assembled_image(app_id) == image2
+            for nid in vol_ids)
+        stale_accepts = sum(px.stale_accepts for px in engines)
+        assert stale_accepts == 0, \
+            "mixed-version tripwire fired: a stale piece was accepted"
+        assert byte_identical, \
+            "chaos overlay: a survivor did not converge to v2 bytes"
+        return {
+            "n_volunteers": n_volunteers,
+            "image_mb": image_mb,
+            "churn": churn,
+            "loss": loss,
+            "converged": ok,
+            "byte_identical": byte_identical,
+            "no_stale": stale_accepts == 0,
+            "stale_accepts": stale_accepts,
+            "reused_pieces": sum(px.reused_pieces for px in engines),
+            "stale_have_demoted": sum(px.stale_have_demoted
+                                      for px in engines),
+            "stale_piece_data": sum(px.stale_piece_data
+                                    for px in engines),
+            "stale_reqs_refused": sum(px.stale_reqs_refused
+                                      for px in engines),
+            "upgrades": sum(px.upgrades for px in engines),
+            "crashes": rt.crash_count,
+            "restarts": rt.restart_count,
+            "makespan_s": rt.now(),
+        }
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
 def scenario_xi(verbose: bool = True, n_replicas: int = 50,
                 ckpt_mb: float = 2048.0, n_pieces: int = 128,
                 n_islands: int = 8, uplink_mbps: float = 200.0,
@@ -860,7 +1192,7 @@ ALL_TABLES = {"table1": table1, "table2": table2, "table3": table3,
               "table4": table4, "scenario_v": scenario_v,
               "scenario_vi": scenario_vi, "scenario_vii": scenario_vii,
               "scenario_viii": scenario_viii, "scenario_ix": scenario_ix,
-              "scenario_xi": scenario_xi}
+              "scenario_x": scenario_x, "scenario_xi": scenario_xi}
 
 if __name__ == "__main__":
     for name, fn in ALL_TABLES.items():

@@ -176,6 +176,74 @@ def bench_scenario_ix(verbose: bool = True, n_volunteers: int = 500,
     return rows
 
 
+def bench_scenario_x(verbose: bool = True, n_volunteers: int = 200,
+                     image_mb: float = 64.0, n_pieces: int = 128,
+                     delta_frac: float = 0.05, backend=None,
+                     include_chaos: bool = True):
+    """Scenario X (versioned-manifest delta upgrade) as perf-trajectory
+    rows: one row per arm (delta upgrade vs scratch redistribution) so
+    bench_guard tracks `upgrade_traffic_bytes` and `upgrade_makespan_s`
+    independently, plus a summary row with the >=10x reduction ratios
+    and the churn-overlay verdict (`no_stale` / `chaos_ready`)."""
+    from benchmarks.paper_tables import scenario_x
+    res = scenario_x(verbose=False, n_volunteers=n_volunteers,
+                     image_mb=image_mb, n_pieces=n_pieces,
+                     delta_frac=delta_frac, backend=backend,
+                     include_chaos=include_chaos)
+    rows = [{
+        "name": f"swarm_scenario_x_upgrade_n{n_volunteers}",
+        "us_per_call": 0.0,
+        "derived": (f"delta {res['n_changed']}/{n_pieces} pieces: "
+                    f"{res['upgrade_traffic_bytes'] / 1e6:.0f}MB "
+                    f"{res['upgrade_makespan_s']:.0f}s reused "
+                    f"{res['reused_pieces']} "
+                    f"upgraded={res['upgraded']}"),
+        "metrics": {"n_volunteers": n_volunteers, "n_pieces": n_pieces,
+                    **{k: res[k] for k in
+                       ("image_mb", "n_changed", "delta_frac",
+                        "upgrade_traffic_bytes", "upgrade_makespan_s",
+                        "reused_pieces", "upgraded", "stale_accepts",
+                        "no_stale", "wall_s")}},
+    }, {
+        "name": f"swarm_scenario_x_scratch_n{n_volunteers}",
+        "us_per_call": 0.0,
+        "derived": (f"full {image_mb:.0f}MB redistribution: "
+                    f"{res['scratch_traffic_bytes'] / 1e6:.0f}MB "
+                    f"{res['scratch_makespan_s']:.0f}s "
+                    f"replicated={res['replicated']}"),
+        "metrics": {"n_volunteers": n_volunteers, "n_pieces": n_pieces,
+                    **{k: res[k] for k in
+                       ("image_mb", "scratch_traffic_bytes",
+                        "scratch_makespan_s", "v1_makespan_s",
+                        "v1_traffic_bytes", "replicated")}},
+    }]
+    summary = {"n_volunteers": n_volunteers,
+               "traffic_reduction": res["traffic_reduction"],
+               "makespan_speedup": res["makespan_speedup"],
+               "no_stale": res["no_stale"],
+               "upgraded": res["upgraded"],
+               "replicated": res["replicated"]}
+    if include_chaos:
+        c = res["chaos"]
+        summary["chaos_ready"] = res["chaos_ready"]
+        summary["chaos_reused_pieces"] = c["reused_pieces"]
+        summary["chaos_stale_have_demoted"] = c["stale_have_demoted"]
+        summary["chaos_stale_accepts"] = c["stale_accepts"]
+    rows.append({
+        "name": f"swarm_scenario_x_summary_n{n_volunteers}",
+        "us_per_call": 0.0,
+        "derived": (f"traffic /{res['traffic_reduction']:.1f} makespan "
+                    f"x{res['makespan_speedup']:.1f} "
+                    f"no_stale={res['no_stale']} "
+                    f"chaos_ready={summary.get('chaos_ready')}"),
+        "metrics": summary,
+    })
+    if verbose:
+        for r in rows:
+            print(f"[swarm] {r['name']}: {r['derived']}")
+    return rows
+
+
 def bench_scenario_xi(verbose: bool = True, n_replicas: int = 50,
                       ckpt_mb: float = 2048.0, n_islands: int = 8,
                       n_pieces: int = 128):
@@ -378,12 +446,27 @@ def main(argv=None) -> None:
                          "volunteers over K islands (e.g. 500,8 or the "
                          "CI smoke 64,4); with --json, rows are merged "
                          "into the file by name")
+    ap.add_argument("--scenario-x", metavar="N",
+                    help="run ONLY Scenario X (versioned-manifest delta "
+                         "upgrade) with N volunteers (e.g. 200 or the CI "
+                         "smoke 32); with --json, rows are merged into "
+                         "the file by name")
     ap.add_argument("--scenario-xi", metavar="R,MB",
                     help="run ONLY Scenario XI (checkpoint flash crowd) "
                          "at R replicas pulling an MB-sized checkpoint "
                          "(e.g. 50,2048 or the CI smoke 8,256); with "
                          "--json, rows are merged into the file by name")
     args = ap.parse_args(argv)
+    if args.scenario_x:
+        n = int(args.scenario_x)
+        rows = bench_scenario_x(
+            n_volunteers=n, image_mb=8.0 if n <= 64 else 64.0,
+            n_pieces=64 if n <= 64 else 128, backend=args.backend)
+        if args.json:
+            merge_rows(args.json, rows)
+            print(f"[swarm] merged {len(rows)} scenario-x rows "
+                  f"into {args.json}")
+        return
     if args.scenario_xi:
         r, mb = (int(x) for x in args.scenario_xi.split(","))
         rows = bench_scenario_xi(n_replicas=r, ckpt_mb=float(mb),

@@ -146,14 +146,28 @@ class CheckpointStore:
             json.dump(manifest, f)
         # emit the swarm metainfo: a PieceManifest (content-hashed, like a
         # .torrent) over the step's canonical packed image, so replicas
-        # can join the distribution swarm straight off the step directory
-        pm = PieceManifest.from_bytes(self.swarm_app_id(step),
-                                      pack_step_image(tmp),
-                                      self.swarm_piece_bytes)
+        # can join the distribution swarm straight off the step directory.
+        # Successive committed steps form a revision chain (version +
+        # prev_manifest_hash): a replica holding v(k) seeds its v(k+1)
+        # inventory from the pieces the delta left unchanged.
+        prev_pm = None
+        prior = [s for s in self.steps() if s < step]
+        if prior:
+            try:
+                prev_pm = self.swarm_manifest(prior[-1])
+            except Exception:
+                prev_pm = None
+        pm = PieceManifest.from_bytes(
+            self.swarm_app_id(step), pack_step_image(tmp),
+            self.swarm_piece_bytes,
+            version=(prev_pm.version + 1 if prev_pm is not None else 1),
+            prev=prev_pm)
         with open(os.path.join(tmp, "swarm.json"), "w") as f:
             json.dump({"app_id": pm.app_id, "piece_bytes": pm.piece_bytes,
                        "total_bytes": pm.total_bytes,
                        "piece_hashes": list(pm.piece_hashes),
+                       "version": pm.version,
+                       "prev_manifest_hash": pm.prev_manifest_hash,
                        "manifest_hash": pm.manifest_hash}, f)
         with open(os.path.join(tmp, "COMMITTED"), "w") as f:
             f.write(str(time.time()))
@@ -189,7 +203,9 @@ class CheckpointStore:
             doc = json.load(f)
         pm = PieceManifest(doc["app_id"], int(doc["piece_bytes"]),
                            int(doc["total_bytes"]),
-                           tuple(doc["piece_hashes"]), content_hashed=True)
+                           tuple(doc["piece_hashes"]), content_hashed=True,
+                           version=int(doc.get("version", 1)),
+                           prev_manifest_hash=doc.get("prev_manifest_hash"))
         assert pm.manifest_hash == doc["manifest_hash"], \
             "swarm.json does not match its own metainfo"
         return pm

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import os
 import tempfile
+from dataclasses import replace
 from typing import Any, Optional, Tuple
 
 from repro.checkpoint.store import CheckpointStore, unpack_step_image
@@ -38,10 +39,13 @@ def checkpoint_application(store: CheckpointStore,
     manifest = store.swarm_manifest(step)
     if app_id is not None and app_id != manifest.app_id:
         # advertise under a caller-chosen id: rebuild the metainfo so the
-        # manifest hash still binds (app_id, piece size, content)
+        # manifest hash still binds (app_id, piece size, content); the
+        # revision chain (version, prev hash) rides along unchanged
         image = store.pack_image(step)
-        manifest = PieceManifest.from_bytes(app_id, image,
-                                            manifest.piece_bytes)
+        manifest = replace(
+            PieceManifest.from_bytes(app_id, image, manifest.piece_bytes),
+            version=manifest.version,
+            prev_manifest_hash=manifest.prev_manifest_hash)
     else:
         image = store.pack_image(step)
     return Application(manifest.app_id, host_id, app_bytes=len(image),
@@ -54,8 +58,11 @@ def verify_image(image, manifest: PieceManifest) -> bool:
     """Content re-hash of an assembled image against its metainfo."""
     if image is None or len(image) != manifest.total_bytes:
         return False
-    rehash = PieceManifest.from_bytes(manifest.app_id, image,
-                                      manifest.piece_bytes)
+    rehash = replace(
+        PieceManifest.from_bytes(manifest.app_id, image,
+                                 manifest.piece_bytes),
+        version=manifest.version,
+        prev_manifest_hash=manifest.prev_manifest_hash)
     return rehash.manifest_hash == manifest.manifest_hash
 
 

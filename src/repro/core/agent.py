@@ -37,8 +37,8 @@ from typing import Any, Callable, Dict, List, Optional, Set
 
 from repro.core import directory as dirs
 from repro.core.messages import (APP_DATA, APP_LIST, BYE, CHOKE, COST_MAP,
-                                 DROP_APP, HAVE, INTERESTED, NO_WORK,
-                                 PART_CANCEL, PART_DONE, PEER_GONE,
+                                 DROP_APP, HAVE, INTERESTED, MANIFEST_UPDATE,
+                                 NO_WORK, PART_CANCEL, PART_DONE, PEER_GONE,
                                  PIECE_CANCEL, PIECE_DATA, PIECE_REQ, PING,
                                  PONG, REGISTER, REQ, RESULT, RESULT_ACK,
                                  SEEDER_UPDATE, STATUS, UNCHOKE, AppInfo, Msg)
@@ -192,6 +192,39 @@ class Agent(Node):
         if self.dir:
             self.dir.seed_app(app.app_id, app.app_bytes, image=app.image)
 
+    def publish_update(self, app_id: str, new_manifest,
+                       image: Optional[bytes] = None) -> bool:
+        """Publish revision v(k+1) of a hosted app (delta distribution).
+
+        Swaps the image behind a strictly newer versioned manifest,
+        re-registers the executables under the new manifest hash, and
+        announces MANIFEST_UPDATE to the tracker, which resets the seeder
+        set to this host and gossips the new metainfo to the swarm —
+        members then carry over unchanged verified pieces and fetch only
+        the delta.  `image` carries the new bytes for real apps (synthetic
+        revisions pass None).  Returns False for non-superseding updates."""
+        app = self.apps.get(app_id)
+        if app is None:
+            return False
+        old = app.manifest
+        if old is not None and not new_manifest.supersedes(old):
+            return False
+        app.manifest = new_manifest
+        if image is not None:
+            app.image = image
+            app.app_bytes = len(image)
+        register_executable(new_manifest.manifest_hash, app.run_fn,
+                            app.cost_fn, blueprint=app.blueprint())
+        self.px.upgrade(app_id, new_manifest, image=app.image, full=True)
+        self.images[app_id] = new_manifest.manifest_hash
+        if self.dir:
+            self.dir.seed_app(app_id, app.app_bytes, image=app.image)
+        self.SEND(self.server_id, Msg(MANIFEST_UPDATE, self.node_id,
+                                      {"app_id": app_id,
+                                       "manifest": new_manifest},
+                                      size_bytes=512))
+        return True
+
     def start(self, rt: Runtime) -> None:
         super().start(rt)
         self._last_server = rt.now()
@@ -300,6 +333,9 @@ class Agent(Node):
             self._on_peer_gone(msg.payload["node"])
         elif kind == SEEDER_UPDATE:
             self._on_seeder_update(msg)
+        elif kind == MANIFEST_UPDATE:
+            self._apply_manifest_update(msg.payload["app_id"],
+                                        msg.payload["manifest"])
         elif kind == COST_MAP:
             self.px.set_cost_map(msg.payload["island"],
                                  msg.payload["costs"],
@@ -646,6 +682,28 @@ class Agent(Node):
     # All swarm transfer mechanics live in the PieceExchange engine
     # (core/piece_exchange.py); the agent only routes messages to it (see
     # RECV) and reacts to image completion below.
+    def _apply_manifest_update(self, app_id: str, manifest) -> None:
+        """A newer revision of an app we track was published (tracker
+        MANIFEST_UPDATE gossip, or a fresher APP_LIST row): retire the
+        old image identity and move the engine to the delta fetch.
+        Idempotent; stale or duplicate updates are ignored."""
+        if manifest is None or app_id in self.apps:
+            return                       # we are the publisher (or junk)
+        local = self.px.manifests.get(app_id)
+        if local is None or not manifest.supersedes(local):
+            return
+        # the old manifest hash no longer names a valid image here: work
+        # execution and replica seeding re-enable when v(k+1) verifies
+        self.images.pop(app_id, None)
+        self.image_completed_at.pop(app_id, None)
+        if not self.px.upgrade(app_id, manifest):
+            return
+        if app_id in self.px.fetching:
+            ctx = self.current.setdefault(app_id, {"host": None,
+                                                   "busy": False})
+            ctx["fetching"] = True
+            ctx["last_req"] = self.rt.now()
+
     def _on_image_complete(self, app_id: str, manifest_hash: str,
                            image: Optional[bytes]) -> None:
         """Engine callback — all pieces verified: unpack the executable via
@@ -671,7 +729,21 @@ class Agent(Node):
                 d_app_bytes=app.app_bytes, m_min=app.m_min))
             self.SEND(self.server_id, Msg(SEEDER_UPDATE, self.node_id,
                                           {"app_id": app_id,
-                                           "seeder": self.node_id},
+                                           "seeder": self.node_id,
+                                           "manifest_hash": manifest_hash},
+                                          size_bytes=96))
+        elif (self.cfg.replica_seed and entry is not None
+                and app_id in self.replicas):
+            # a revision upgrade completed while we were already a replica
+            # seeder: the tracker reset the app's seeder set to the
+            # publisher, so our membership must be re-announced
+            self.replicas[app_id] = (entry.blueprint()
+                                     if entry.blueprint is not None
+                                     else self.replicas[app_id])
+            self.SEND(self.server_id, Msg(SEEDER_UPDATE, self.node_id,
+                                          {"app_id": app_id,
+                                           "seeder": self.node_id,
+                                           "manifest_hash": manifest_hash},
                                           size_bytes=96))
         ctx = self.current.get(app_id)
         if ctx is not None and ctx.get("fetching"):
@@ -803,6 +875,18 @@ class Agent(Node):
         self.app_list = [r for r in rows if r.app_id not in self.stopped_apps]
         for row in self.app_list:
             if row.manifest is not None:
+                local = self.px.manifests.get(row.app_id)
+                if local is not None and row.manifest.supersedes(local):
+                    # the tracker's row moved to a newer revision (our
+                    # MANIFEST_UPDATE was lost, or we were partitioned):
+                    # catch up before trusting any seeder set
+                    self._apply_manifest_update(row.app_id, row.manifest)
+                    local = self.px.manifests.get(row.app_id)
+                if local is not None \
+                        and local.version != row.manifest.version:
+                    # a stale row (older revision than we track) must not
+                    # feed its seeder set into our availability plane
+                    continue
                 self.px.note_full_seeders(row.app_id,
                                           set(row.seeders) | {row.host_id})
                 if (row.app_id in self.replicas
@@ -812,7 +896,10 @@ class Agent(Node):
                     self.SEND(self.server_id,
                               Msg(SEEDER_UPDATE, self.node_id,
                                   {"app_id": row.app_id,
-                                   "seeder": self.node_id}, size_bytes=96))
+                                   "seeder": self.node_id,
+                                   "manifest_hash":
+                                       self.images.get(row.app_id)},
+                                  size_bytes=96))
             # tracker promoted this node from replica to host (origin died)
             if row.host_id == self.node_id and row.app_id in self.replicas:
                 app = self.replicas.pop(row.app_id)

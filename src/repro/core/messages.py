@@ -53,6 +53,10 @@ PIECE_REQ = "PIECE_REQ"        # leecher -> holder: request one image piece
 PIECE_DATA = "PIECE_DATA"      # holder -> leecher: piece payload + proof
 SEEDER_UPDATE = "SEEDER_UPDATE"  # agent -> server (and relayed to seeders):
                                  # node completed the image, joins seeder set
+MANIFEST_UPDATE = "MANIFEST_UPDATE"  # host -> server -> swarm: a new revision
+                                 # of an app image (versioned PieceManifest);
+                                 # bypasses the SEEDER_UPDATE push limiter —
+                                 # version gossip must never go stale
 PART_DONE = "PART_DONE"        # seeder <-> seeder: validated-part gossip
 PEER_GONE = "PEER_GONE"        # server -> agents: volunteer left/died;
                                  # reclaim its leases immediately

@@ -116,20 +116,66 @@ class RollingRate:
 # with N replicas costs O(image) memory instead of O(N·image).  The keys are
 # content-derived (the info-hash covers the per-piece content hashes), so a
 # cache hit carries exactly the trust piece verification already
-# established.  Eviction only loses the dedup, never data — holders keep
-# their buffer references alive.
+# established.
+#
+# Entries are REFCOUNTED: every engine that maps an app to the buffer holds
+# a reference (acquired in add_local_app/_complete_fetch, released by
+# upgrade()/drop_app()).  With versioned manifests each upgrade retires a
+# whole image under a hash nobody will ever intern again — without the
+# release, 5 upgrades leak 5 full buffers per app.  Unreferenced entries
+# are kept as a small LRU dedup tail (a late joiner completing v(k) right
+# after everyone upgraded still dedups) bounded by _IMAGE_INTERN_MAX;
+# referenced entries are never evicted.
 _IMAGE_INTERN: "collections.OrderedDict[str, bytes]" = collections.OrderedDict()
+_IMAGE_REFS: Dict[str, int] = {}
 _IMAGE_INTERN_MAX = 8
 
 
+def _evict_unreferenced() -> None:
+    excess = sum(1 for mh in _IMAGE_INTERN if mh not in _IMAGE_REFS) \
+        - _IMAGE_INTERN_MAX
+    if excess <= 0:
+        return
+    for mh in [m for m in _IMAGE_INTERN if m not in _IMAGE_REFS][:excess]:
+        del _IMAGE_INTERN[mh]
+
+
 def intern_image(manifest_hash: str, image) -> bytes:
+    """Insert (or dedup against) the shared buffer AND acquire one
+    reference; pair every call with a release_image."""
     cached = _IMAGE_INTERN.get(manifest_hash)
     if cached is None:
         cached = bytes(image) if isinstance(image, memoryview) else image
         _IMAGE_INTERN[manifest_hash] = cached
-        while len(_IMAGE_INTERN) > _IMAGE_INTERN_MAX:
-            _IMAGE_INTERN.popitem(last=False)
+    else:
+        _IMAGE_INTERN.move_to_end(manifest_hash)
+    _IMAGE_REFS[manifest_hash] = _IMAGE_REFS.get(manifest_hash, 0) + 1
+    _evict_unreferenced()
     return cached
+
+
+def acquire_image(manifest_hash: str) -> Optional[bytes]:
+    """Acquire a reference on an already-interned buffer (None on miss)."""
+    cached = _IMAGE_INTERN.get(manifest_hash)
+    if cached is not None:
+        _IMAGE_INTERN.move_to_end(manifest_hash)
+        _IMAGE_REFS[manifest_hash] = _IMAGE_REFS.get(manifest_hash, 0) + 1
+    return cached
+
+
+def release_image(manifest_hash: str) -> None:
+    n = _IMAGE_REFS.get(manifest_hash, 0)
+    if n <= 1:
+        _IMAGE_REFS.pop(manifest_hash, None)
+        _evict_unreferenced()
+    else:
+        _IMAGE_REFS[manifest_hash] = n - 1
+
+
+def interned_image_count() -> int:
+    """Number of interned buffers currently held (the RSS proxy the
+    intern-growth regression test bounds across upgrades)."""
+    return len(_IMAGE_INTERN)
 
 
 class PieceExchange:
@@ -230,6 +276,22 @@ class PieceExchange:
             collections.defaultdict(lambda: collections.defaultdict(int))
         self.cancels_sent = 0
         self.dup_piece_data = 0
+        # --- versioned-manifest (delta distribution) accounting ----------- #
+        # app_id -> manifest_hash of the interned buffer this engine holds
+        # a reference on (released on upgrade/drop)
+        self._interned: Dict[str, str] = {}
+        self.upgrades = 0                # revisions applied locally
+        self.reused_pieces = 0           # pieces carried over re-verified
+        self.stale_piece_data = 0        # version-mismatched PIECE_DATA
+        #                                  discarded (NOT a ban — honest
+        #                                  peers on the old revision)
+        self.stale_reqs_refused = 0      # version-mismatched PIECE_REQ
+        self.stale_have_demoted = 0      # old-version HAVEs that demoted
+        #                                  the announcing peer
+        # tripwire for the mixed-version invariant: a version-mismatched
+        # payload must NEVER reach the inventory.  Incremented only if the
+        # discard gate is bypassed; chaos scenarios assert it stays 0.
+        self.stale_accepts = 0
 
     # ======================== ALTO cost map (P4P) ======================= #
     def set_cost_map(self, island: int, costs: List[int],
@@ -263,9 +325,21 @@ class PieceExchange:
         if image is not None:
             if manifest.content_hashed:
                 image = intern_image(manifest.manifest_hash, image)
+                self._track_intern(app_id, manifest.manifest_hash)
             self.image_src[app_id] = memoryview(image)
         if self.hub is not None:
             self.hub.register_seed(self, app_id, manifest)
+
+    def _track_intern(self, app_id: str, manifest_hash: str) -> None:
+        """Record that this engine holds one intern reference for the app,
+        releasing any reference it held for a previous revision."""
+        old = self._interned.get(app_id)
+        if old == manifest_hash:
+            release_image(manifest_hash)     # already held: keep one ref
+            return
+        if old is not None:
+            release_image(old)
+        self._interned[app_id] = manifest_hash
 
     def join(self, app_id: str, manifest: PieceManifest) -> None:
         """Start leeching an app image piece-wise; announces the bitfield
@@ -324,6 +398,144 @@ class PieceExchange:
             self.full_seeders[app_id] = seeders
             self._pool_changed(app_id)
 
+    # ================== versioned manifests (delta path) ================= #
+    def _reset_swarm_view(self, app_id: str) -> None:
+        """Forget everything known about the swarm FOR THE PREVIOUS
+        revision: masks, availability, seeder sets, in-flight requests and
+        upload grants all describe v(k) holdings and must never leak into
+        v(k+1) scheduling.  Swarm *membership* (who to announce to) is
+        kept — the same nodes are upgrading with us."""
+        for asked in self.pending.pop(app_id, {}).values():
+            for peer in asked:
+                self.peer_load[peer] = max(0, self.peer_load[peer] - 1)
+        self.stalled_holders.pop(app_id, None)
+        self.peer_masks.pop(app_id, None)
+        self.full_seeders.pop(app_id, None)
+        self._counts.pop(app_id, None)
+        self._piece_holders.pop(app_id, None)
+        self._pool_cache.pop(app_id, None)
+        self._interest_clean.discard(app_id)
+        self.interest_sent.pop(app_id, None)
+        # upload grants belong to the old revision too; no CHOKE burst is
+        # needed — our v(k+1) HAVE makes old-version peers drop us, and a
+        # straggler's request bounces off the version gate with a HAVE
+        self.interested.pop(app_id, None)
+        self.unchoked.pop(app_id, None)
+        self.opt_unchoked.pop(app_id, None)
+        self.queued_reqs.pop(app_id, None)
+
+    def _read_old_piece(self, app_id: str, old_manifest: PieceManifest,
+                        old_image, old_store: Dict[int, Any], piece_id: int):
+        """Bytes of a piece as held under the previous revision (shared
+        image view, per-piece store, or the on-disk cache)."""
+        if old_image is not None:
+            lo = piece_id * old_manifest.piece_bytes
+            return old_image[lo:lo + old_manifest.piece_bytes]
+        data = old_store.get(piece_id)
+        if data is None and self.dirs is not None:
+            data = self.dirs.load_piece(app_id, piece_id)
+        return data
+
+    def upgrade(self, app_id: str, new_manifest: PieceManifest,
+                image=None, full: bool = False) -> bool:
+        """Move the app to a newer manifest revision (delta distribution).
+
+        Pieces unchanged per `new_manifest.delta(old)` that this node
+        already holds verified are carried over — re-read and re-HASHED
+        for content-hashed manifests (the reuse rule: a reused piece is
+        never trusted on faith) — so only the changed pieces are fetched
+        from the swarm.  `full=True` is the publisher path: this node
+        holds the complete new revision outright (`image` for real apps).
+        Returns False for stale/duplicate updates (version not newer) or
+        unknown apps."""
+        old = self.manifests.get(app_id)
+        if old is None or not new_manifest.supersedes(old):
+            return False
+        old_inv = self.inventories.get(app_id)
+        if old_inv is None and app_id in self.complete:
+            old_inv = PieceInventory(old, complete=True)
+        self.upgrades += 1
+        self._reset_swarm_view(app_id)
+        if self.hub is not None:
+            self.hub.retire(self, app_id, old)
+        self.manifests[app_id] = new_manifest
+        old_image = self.image_src.pop(app_id, None)
+        old_store = self.store.pop(app_id, None) or {}
+        self.complete.discard(app_id)
+        if full:
+            # publisher: complete new image by fiat (real bytes or a
+            # synthetic revision), release the superseded interned buffer
+            self.inventories.pop(app_id, None)
+            self.fetching.discard(app_id)
+            self.complete.add(app_id)
+            if image is not None and new_manifest.content_hashed:
+                image = intern_image(new_manifest.manifest_hash, image)
+                self._track_intern(app_id, new_manifest.manifest_hash)
+            else:
+                mh = self._interned.pop(app_id, None)
+                if mh is not None:
+                    release_image(mh)
+            if image is not None:
+                self.image_src[app_id] = memoryview(image)
+                if self.dirs is not None:
+                    self.dirs.save_seed_image(app_id, bytes(image))
+            if self.hub is not None:
+                self.hub.register_seed(self, app_id, new_manifest)
+            else:
+                self.send(self.tracker_id, self._have_msg(app_id))
+            return True
+        # leecher: seed the new inventory from still-valid old pieces
+        reads: Dict[int, Any] = {}
+
+        def read_piece(piece_id: int):
+            data = reads.get(piece_id)
+            if data is None:
+                data = self._read_old_piece(app_id, old, old_image,
+                                            old_store, piece_id)
+                if data is not None:
+                    reads[piece_id] = data
+            return data
+
+        new_inv = PieceInventory(new_manifest)
+        adopted = (new_inv.seed_from(old_inv, read_piece)
+                   if old_inv is not None else set())
+        self.reused_pieces += len(adopted)
+        self.inventories[app_id] = new_inv
+        if new_manifest.content_hashed:
+            self.store[app_id] = {pid: reads[pid] for pid in adopted}
+            if self.dirs is not None:
+                for pid in self.dirs.list_pieces(app_id):
+                    if pid not in adopted:
+                        self.dirs.drop_piece(app_id, pid)
+                for pid in adopted:
+                    self.dirs.save_piece(app_id, pid, reads[pid])
+        # the superseded buffer's intern slot is released now; adopted
+        # slices keep the underlying bytes alive only until completion
+        # reassembles (and interns) the new image
+        mh = self._interned.pop(app_id, None)
+        if mh is not None:
+            release_image(mh)
+        self.fetching.add(app_id)
+        if self.hub is not None:
+            self.hub.register_leech(self, app_id, new_manifest)
+            for piece_id in new_inv.have:
+                self.hub.note_have(self, app_id, piece_id)
+            if new_inv.complete:
+                self._complete_fetch(app_id)
+            return True
+        # one v(k+1) announce to the tracker and known swarm peers: seeds
+        # the new availability plane AND demotes us from v(k) pools
+        announce = self._have_msg(app_id)
+        for target in sorted(self.swarm_peers.get(app_id, set()) -
+                             {self.node_id}):
+            self.send(target, announce)
+        self.send(self.tracker_id, announce)
+        if new_inv.complete:
+            self._complete_fetch(app_id)
+        else:
+            self.pump(app_id)
+        return True
+
     def drop_app(self, app_id: str, keep_image: bool = False) -> None:
         """Forget an app (STOP).  `keep_image` preserves the manifest and
         payload for apps this node still seeds as origin."""
@@ -352,6 +564,9 @@ class PieceExchange:
             self.manifests.pop(app_id, None)
             self.image_src.pop(app_id, None)
             self.store.pop(app_id, None)
+            mh = self._interned.pop(app_id, None)
+            if mh is not None:
+                release_image(mh)
 
     def on_peer_gone(self, node: str) -> None:
         # hub mode: the runtime's crash hook already reset the node's row
@@ -679,6 +894,9 @@ class PieceExchange:
     def _send_req(self, app_id: str, piece_id: int, peer: str,
                   endgame: bool = False) -> None:
         payload = {"app_id": app_id, "piece_id": piece_id}
+        v = self._version(app_id)
+        if v is not None:
+            payload["v"] = v
         if endgame:
             payload["endgame"] = True
         self.send(peer, Msg(PIECE_REQ, self.node_id, payload, size_bytes=96))
@@ -802,6 +1020,22 @@ class PieceExchange:
             self.full_seeders[app_id].discard(peer)
         return True
 
+    def _drop_peer_pending(self, app_id: str, peer: str) -> bool:
+        """Withdraw every in-flight request parked at `peer` for the app
+        (it turned out to be on a different manifest revision).  Returns
+        True when anything was dropped."""
+        pending = self.pending.get(app_id)
+        if not pending:
+            return False
+        dropped = False
+        for piece_id, asked in list(pending.items()):
+            if asked.pop(peer, None) is not None:
+                self.peer_load[peer] = max(0, self.peer_load[peer] - 1)
+                dropped = True
+                if not asked:
+                    del pending[piece_id]
+        return dropped
+
     def _promote_full_seeder(self, app_id: str, peer: str) -> None:
         """The peer completed the image: it is a seeder now, not a
         leecher — release any upload slot it held."""
@@ -812,13 +1046,29 @@ class PieceExchange:
         self.unchoked[app_id].discard(peer)
         self.queued_reqs[app_id].pop(peer, None)
 
+    def _version(self, app_id: str) -> Optional[int]:
+        manifest = self.manifests.get(app_id)
+        return manifest.version if manifest is not None else None
+
     def _have_msg(self, app_id: str, peer: Optional[str] = None) -> Msg:
         mask = self.bitfield_mask(app_id)
         payload = {"app_id": app_id, "mask": mask}
+        v = self._version(app_id)
+        if v is not None:
+            payload["v"] = v
         if peer is not None:
             payload["peer"] = peer
         return Msg(HAVE, self.node_id, payload,
                    size_bytes=96 + mask_nbytes(mask))
+
+    def _stale_version(self, app_id: str, v: Optional[int]) -> bool:
+        """Does a message tagged with manifest version `v` mismatch the
+        revision this node currently tracks?  Untagged messages (pre-
+        versioning peers, unit harnesses) are treated as current."""
+        if v is None:
+            return False
+        local = self._version(app_id)
+        return local is not None and v != local
 
     def on_have(self, msg: Msg) -> None:
         payload = msg.payload
@@ -828,6 +1078,21 @@ class PieceExchange:
         if peer == self.node_id:
             return
         self.swarm_peers[app_id].add(peer)
+        if self._stale_version(app_id, payload.get("v")):
+            # mixed-version isolation: a mask for a different revision of
+            # the image must NEVER merge into this revision's availability.
+            # A crash-restarted peer re-announcing its v(k) mask after the
+            # swarm moved to v(k+1) is DEMOTED (its pieces are stale, its
+            # full-seeder claim doubly so); a peer that is AHEAD of us is
+            # removed from our pool too — it stopped serving our revision.
+            v = payload.get("v")
+            if v < (self._version(app_id) or 0):
+                self.stale_have_demoted += 1
+            changed = self._sync_peer_mask(app_id, peer, 0)
+            rerouted = self._drop_peer_pending(app_id, peer)
+            if (changed or rerouted) and app_id in self.fetching:
+                self.pump(app_id)
+            return
         if "peer" in payload:
             # relayed (extra hop, possibly stale): grow-only merge
             changed = self._note_peer_mask(app_id, peer,
@@ -1003,6 +1268,14 @@ class PieceExchange:
         self.swarm_peers[app_id].add(peer)
         manifest = self.manifests.get(app_id)
         inv = self.inventories.get(app_id)
+        if self._stale_version(app_id, msg.payload.get("v")):
+            # never serve across revisions: our pieces would verify against
+            # a different manifest (or worse, collide on unchanged ids and
+            # smuggle stale content in as fresh).  The HAVE reply carries
+            # our version, so the requester demotes us from its pool.
+            self.stale_reqs_refused += 1
+            self.send(peer, self._have_msg(app_id))
+            return
         holds = (app_id in self.complete
                  or (inv is not None and inv.has(piece_id)))
         if manifest is None or not holds:
@@ -1039,7 +1312,8 @@ class PieceExchange:
         manifest = self.manifests[app_id]
         mask = self.bitfield_mask(app_id)
         payload = {"app_id": app_id, "piece_id": piece_id,
-                   "proof": manifest.piece_hashes[piece_id], "mask": mask}
+                   "proof": manifest.piece_hashes[piece_id], "mask": mask,
+                   "v": manifest.version}
         data = self._piece_payload(app_id, piece_id)
         if data is not None:
             payload["data"] = data
@@ -1056,6 +1330,19 @@ class PieceExchange:
         piece_id = msg.payload["piece_id"]
         peer = msg.src
         self.swarm_peers[app_id].add(peer)
+        if self._stale_version(app_id, msg.payload.get("v")):
+            # a payload for a different manifest revision: DISCARD, do not
+            # verify, do not merge the attached mask.  This is NOT a ban —
+            # the peer is an honest holder of the other revision (e.g. a
+            # v1 seeder answering a request issued before our upgrade);
+            # banning it would lose it for good once it upgrades too.
+            self.stale_piece_data += 1
+            if msg.payload.get("v", 0) < (self._version(app_id) or 0):
+                self._sync_peer_mask(app_id, peer, 0)
+            self._drop_peer_pending(app_id, peer)
+            if app_id in self.fetching:
+                self.pump(app_id)
+            return
         self._note_peer_mask(app_id, peer, msg.payload.get("mask"))
         pending = self.pending[app_id]
         asked = pending.get(piece_id)
@@ -1080,6 +1367,11 @@ class PieceExchange:
             self.unchoked_by[app_id].discard(peer)
             self.pump(app_id)
             return
+        if self._stale_version(app_id, msg.payload.get("v")):
+            # unreachable while the discard gate above holds; evaluated
+            # again at the accept site so any future bypass of that gate
+            # trips the chaos suites' stale_accepts == 0 assertion
+            self.stale_accepts += 1
         manifest = inv.manifest
         nbytes = manifest.piece_size(piece_id)
         self._credit_from(peer, nbytes)
@@ -1151,12 +1443,13 @@ class PieceExchange:
         image = None
         if inv.manifest.content_hashed:
             mh = inv.manifest.manifest_hash
-            image = _IMAGE_INTERN.get(mh)
+            image = acquire_image(mh)
             if image is None:
                 assembled = self.assembled_image(app_id)  # store or disk
                 if assembled is not None:
                     image = intern_image(mh, assembled)
             if image is not None:
+                self._track_intern(app_id, mh)
                 self.image_src[app_id] = memoryview(image)
                 # the shared image supersedes the per-piece slices
                 self.store.pop(app_id, None)

@@ -215,7 +215,10 @@ class SwarmHub:
 
     def __init__(self, backend: Optional[str] = None):
         self.backend = get_backend(backend)
-        self.states: Dict[str, SwarmState] = {}
+        # keyed by (app_id, manifest version): revisions of one app are
+        # DISJOINT swarms — a v(k) engine can neither read nor write
+        # v(k+1) masks, so mixed-version flash crowds never cross
+        self.states: Dict[Tuple[str, int], SwarmState] = {}
         self._cfg = None                   # choke parameters (first client)
         self.batch_ops = 0                 # array-applied decisions
         self.coalesced = 0                 # control messages replaced
@@ -242,13 +245,26 @@ class SwarmHub:
             for i, name in enumerate(st.names):
                 st.island[i] = topology.island_of(name)
 
+    @staticmethod
+    def _key(app_id: str, manifest) -> Tuple[str, int]:
+        return (app_id, int(getattr(manifest, "version", 1) or 1))
+
     def _state(self, app_id: str, manifest) -> SwarmState:
-        st = self.states.get(app_id)
+        key = self._key(app_id, manifest)
+        st = self.states.get(key)
         if st is None:
-            st = self.states[app_id] = SwarmState(app_id, manifest)
+            st = self.states[key] = SwarmState(app_id, manifest)
             if self.topology is not None:
                 st.lookup_island = self.topology.island_of
         return st
+
+    def _lookup(self, px, app_id: str) -> Optional[SwarmState]:
+        """The state for `px`'s CURRENT revision of `app_id` (None when
+        the engine has no manifest or never attached)."""
+        m = px.manifests.get(app_id)
+        if m is None:
+            return None
+        return self.states.get(self._key(app_id, m))
 
     def _attach(self, px, app_id: str, manifest) -> Tuple[SwarmState, int]:
         if self._cfg is None:
@@ -298,14 +314,34 @@ class SwarmHub:
             m[:, i] = 0.0
 
     def has_row(self, app_id: str, name: str) -> bool:
-        st = self.states.get(app_id)
-        return st is not None and name in st.row
+        return any(aid == app_id and name in st.row
+                   for (aid, _), st in self.states.items())
+
+    def retire(self, px, app_id: str, manifest) -> None:
+        """`px` upgraded away from `manifest`'s revision: detach its row
+        from the superseded (app_id, version) state so stale masks can
+        never leak into the new swarm; the state itself is pruned once
+        its last live row retires."""
+        st = self.states.get(self._key(app_id, manifest))
+        if st is None:
+            return
+        i = st.row.get(px.node_id)
+        if i is None:
+            return
+        if st.alive[i]:
+            st.alive[i] = False
+            st.n_alive -= 1
+            self._reset_row(st, i)
+            st.avail_epoch += 1
+        st.clients[i] = None
+        if st.n_alive <= 0:
+            self.states.pop(self._key(app_id, manifest), None)
 
     # ====================== state change mirrors ======================== #
     def note_have(self, px, app_id: str, piece_id: int) -> None:
         """A piece verified locally at `px` — the array-native stand-in
         for the swarm-wide HAVE announce fan-out."""
-        st = self.states.get(app_id)
+        st = self._lookup(px, app_id)
         if st is None:
             return
         i = st.row.get(px.node_id)
@@ -325,7 +361,7 @@ class SwarmHub:
 
     def set_full(self, px, app_id: str) -> None:
         """`px` verified the whole image: seeder from now on."""
-        st = self.states.get(app_id)
+        st = self._lookup(px, app_id)
         if st is None:
             return
         i = st.row.get(px.node_id)
@@ -341,7 +377,7 @@ class SwarmHub:
         """`px`'s pending set (or choke view) changed: re-pump the row on
         the next tick.  The hub reads the pending/budget truth straight
         from the engine's dicts, so there is nothing else to sync."""
-        st = self.states.get(app_id)
+        st = self._lookup(px, app_id)
         if st is None:
             return
         i = st.row.get(px.node_id)
@@ -364,7 +400,7 @@ class SwarmHub:
                received: bool) -> None:
         """Mirror of `_credit_from` / `_credit_to`: transfer bytes into
         the rolling per-link windows the batched rechoke ranks on."""
-        st = self.states.get(app_id)
+        st = self._lookup(px, app_id)
         if st is None:
             return
         i = st.row.get(px.node_id)
@@ -436,7 +472,7 @@ class SwarmHub:
         path reacting to a live PIECE_REQ): applied through the arrays.
         Returns False when either side has no row yet — the caller then
         falls back to the wire message."""
-        st = self.states.get(app_id)
+        st = self._lookup(px, app_id)
         if st is None:
             return False
         h = st.row.get(px.node_id)
@@ -449,7 +485,7 @@ class SwarmHub:
     def choke(self, px, app_id: str, peer: str) -> bool:
         """Holder-initiated choke, applied through the arrays (the peer
         re-routes immediately instead of waiting for a CHOKE message)."""
-        st = self.states.get(app_id)
+        st = self._lookup(px, app_id)
         if st is None:
             return False
         h = st.row.get(px.node_id)
@@ -781,6 +817,17 @@ class SwarmHub:
             self._endgame(st, now)
 
     # ====================== queries / test bridges ====================== #
+    def _find(self, app_id: str, node_id: str) -> Optional[SwarmState]:
+        """Newest-revision state of `app_id` holding a row for `node_id`
+        (test-bridge lookup where no engine handle is available)."""
+        best = None
+        for (aid, ver), st in self.states.items():
+            if aid != app_id or node_id not in st.row:
+                continue
+            if best is None or ver > best[0]:
+                best = (ver, st)
+        return None if best is None else best[1]
+
     def stats(self) -> Dict[str, int]:
         return {"ticks": self.ticks, "batch_ops": self.batch_ops,
                 "coalesced_events": self.coalesced}
@@ -790,7 +837,7 @@ class SwarmHub:
         """Pure query: the (piece, holder) requests the batched engine
         would issue for one node right now — the differential tests'
         bridge to the scalar `pump`."""
-        st = self.states[app_id]
+        st = self._find(app_id, node_id)
         i = st.row[node_id]
         px = st.clients[i]
         missing = ~st.have[i, :]       # invert copies; safe to edit
@@ -812,7 +859,7 @@ class SwarmHub:
                        now: float) -> List[Tuple[int, str]]:
         """Pure query: the endgame duplicates the batched engine would
         issue for one node (scalar `_endgame` bridge)."""
-        st = self.states[app_id]
+        st = self._find(app_id, node_id)
         i = st.row[node_id]
         px = st.clients[i]
         pending = px.pending.get(app_id, {})
@@ -858,7 +905,7 @@ class SwarmHub:
         hub = cls(backend=backend)
         manifest = px.manifests[app_id]
         hub.register_leech(px, app_id, manifest)
-        st = hub.states[app_id]
+        st = hub.states[hub._key(app_id, manifest)]
         me = st.row[px.node_id]
         inv = px.inventories.get(app_id)
         if inv is not None:

@@ -30,8 +30,9 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Set
 
 from repro.core.messages import (APP_LIST, BYE, COST_MAP, DROP_APP, HAVE,
-                                 PEER_GONE, PING, PONG, REGISTER,
-                                 SEEDER_UPDATE, STATUS, AppInfo, Msg)
+                                 MANIFEST_UPDATE, PEER_GONE, PING, PONG,
+                                 REGISTER, SEEDER_UPDATE, STATUS, AppInfo,
+                                 Msg)
 from repro.core.runtime import Node, Runtime
 from repro.core.workunit import mask_nbytes
 
@@ -146,6 +147,8 @@ class TrackerServer(Node):
                 self.seeder_load.setdefault(app_id, {})[msg.src] = n
         elif msg.kind == SEEDER_UPDATE:
             self._on_seeder_update(msg)
+        elif msg.kind == MANIFEST_UPDATE:
+            self._on_manifest_update(msg)
         elif msg.kind == HAVE:
             self._on_have(msg)
         elif msg.kind == BYE:
@@ -213,6 +216,13 @@ class TrackerServer(Node):
         row = self.app_list.get(app_id)
         if row is None or seeder in self.blocklist:
             return
+        mh = msg.payload.get("manifest_hash")
+        if (mh is not None and row.manifest is not None
+                and mh != row.manifest.manifest_hash):
+            # the announce proves completion of a SUPERSEDED revision
+            # (e.g. it raced a MANIFEST_UPDATE): admitting it would route
+            # leechers to a node serving stale pieces as fresh
+            return
         if seeder not in self.members:
             # a SEEDER_UPDATE from a node we already declared dead (e.g.
             # one that completed the image just before crashing, its
@@ -235,6 +245,38 @@ class TrackerServer(Node):
             # SEEDER_UPDATE relay above) still propagates the change
             if self.rt.now() - self._last_push >= self.cfg.push_interval_s:
                 self.PUSH()
+
+    def _on_manifest_update(self, msg: Msg) -> None:
+        """The host published a new revision of an app image (versioned
+        PieceManifest).  The seeder set is RESET to the publisher — every
+        other entry describes the superseded revision — and the new
+        metainfo is gossiped to the swarm immediately.  This path
+        deliberately bypasses the SEEDER_UPDATE push limiter: version
+        gossip that waits on `push_interval_s` leaves volunteers serving
+        (and accepting) stale pieces as fresh."""
+        app_id = msg.payload["app_id"]
+        manifest = msg.payload.get("manifest")
+        row = self.app_list.get(app_id)
+        if row is None or manifest is None:
+            return
+        if msg.src != row.host_id:
+            return                  # only the host may publish revisions
+        if row.manifest is not None and not manifest.supersedes(row.manifest):
+            return
+        targets = set(self.swarms.get(app_id, ())) | set(row.seeders)
+        targets.discard(msg.src)
+        targets.discard(self.node_id)
+        row.manifest = manifest
+        row.seeders = (row.host_id,)
+        row.updated_at = self.rt.now()
+        self._relay_cache.pop(app_id, None)
+        relay = Msg(MANIFEST_UPDATE, self.node_id,
+                    {"app_id": app_id, "manifest": manifest},
+                    size_bytes=512)
+        for t in sorted(targets):
+            self.rt.send(t, relay)
+        # immediate broadcast, deliberately NOT gated on `_last_push`
+        self.PUSH()
 
     def _drop_stale_seeder(self, member: str) -> None:
         """Remove `member` from every seeder set it does not host: its
@@ -334,12 +376,25 @@ class TrackerServer(Node):
         self._relay_cache.pop(row.app_id, None)   # seeder set may change
         prev = self.app_list.get(row.app_id)
         if prev is not None:
-            # the seeder set is tracker-owned state: merge, don't clobber
-            merged = set(prev.seeders) | set(row.seeders) | {row.host_id}
-            row.seeders = tuple(s for s in sorted(merged)
-                                if s == row.host_id or s in self.members)
-            if row.manifest is None:
+            pv = getattr(prev.manifest, "version", None)
+            rv = getattr(row.manifest, "version", None)
+            if row.manifest is None or (pv is not None and rv is not None
+                                        and pv > rv):
+                # a stale upsert (e.g. a STATUS that raced an upgrade)
+                # must never roll the metainfo back to a superseded
+                # revision
                 row.manifest = prev.manifest
+                rv = pv
+            if pv is not None and rv is not None and rv > pv:
+                # the host republished via a plain upsert: every previous
+                # seeder holds the superseded revision — reset the set
+                row.seeders = (row.host_id,)
+            else:
+                # the seeder set is tracker-owned state: merge, don't
+                # clobber
+                merged = set(prev.seeders) | set(row.seeders) | {row.host_id}
+                row.seeders = tuple(s for s in sorted(merged)
+                                    if s == row.host_id or s in self.members)
         elif row.host_id not in row.seeders:
             row.seeders = tuple(row.seeders) + (row.host_id,)
         self.app_list[row.app_id] = row

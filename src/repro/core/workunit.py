@@ -73,6 +73,12 @@ class PieceManifest:
     # (from_bytes): verification then REQUIRES the bytes — the hashes are
     # public metainfo, so a bare proof proves nothing
     content_hashed: bool = False
+    # revision chain: successive revisions of the same app_id carry a
+    # monotonically increasing version and the manifest_hash of the
+    # revision they supersede, so a swarm can diff v(k+1) against v(k)
+    # and move only the changed pieces (delta distribution)
+    version: int = 1
+    prev_manifest_hash: Optional[str] = None
 
     @property
     def n_pieces(self) -> int:
@@ -81,7 +87,27 @@ class PieceManifest:
     @functools.cached_property
     def manifest_hash(self) -> str:
         return _hash(self.app_id, self.piece_bytes, self.total_bytes,
+                     self.version, self.prev_manifest_hash,
                      *self.piece_hashes)
+
+    def supersedes(self, other: Optional["PieceManifest"]) -> bool:
+        """True when this manifest is a strictly newer revision of the
+        same application than `other` (None counts as "nothing held")."""
+        if other is None:
+            return True
+        return (self.app_id == other.app_id
+                and self.version > other.version)
+
+    def delta(self, prev: Optional["PieceManifest"]) -> Set[int]:
+        """Piece ids whose content differs from `prev` (positional hash
+        compare).  Incomparable manifests (different piece size, different
+        hashing mode, or no predecessor) conservatively report every
+        piece as changed — nothing may be reused."""
+        if (prev is None or prev.piece_bytes != self.piece_bytes
+                or prev.content_hashed != self.content_hashed):
+            return set(range(self.n_pieces))
+        return {i for i, h in enumerate(self.piece_hashes)
+                if i >= prev.n_pieces or prev.piece_hashes[i] != h}
 
     @functools.cached_property
     def full_mask(self) -> int:
@@ -95,25 +121,48 @@ class PieceManifest:
         return max(rem, 0)
 
     @classmethod
-    def from_bytes(cls, app_id: str, image,
-                   piece_bytes: int) -> "PieceManifest":
+    def from_bytes(cls, app_id: str, image, piece_bytes: int, *,
+                   version: int = 1,
+                   prev: Optional["PieceManifest"] = None
+                   ) -> "PieceManifest":
         # hash through zero-copy views: building a manifest for a large
-        # image must not materialise a bytes copy per piece
+        # image must not materialise a bytes copy per piece.  An empty
+        # image is a 0-piece manifest (trivially complete, full_mask 0) —
+        # a phantom zero-byte piece 0 could never be transferred or
+        # verified, and a 0-delta upgrade would wedge on it.
         mv = memoryview(image)
         hashes = tuple(
             hashlib.sha1(mv[i:i + piece_bytes]).hexdigest()
-            for i in range(0, max(len(mv), 1), piece_bytes))
+            for i in range(0, len(mv), piece_bytes))
         return cls(app_id, piece_bytes, len(mv), hashes,
-                   content_hashed=True)
+                   content_hashed=True, version=version,
+                   prev_manifest_hash=prev.manifest_hash
+                   if prev is not None else None)
 
     @classmethod
-    def synthetic(cls, app_id: str, total_bytes: int,
-                  piece_bytes: int) -> "PieceManifest":
+    def synthetic(cls, app_id: str, total_bytes: int, piece_bytes: int, *,
+                  version: int = 1,
+                  prev: Optional["PieceManifest"] = None,
+                  changed: Optional[Set[int]] = None) -> "PieceManifest":
         """Manifest for a simulated image: hashes are derived, no bytes are
-        materialised (benchmarks use multi-GB images)."""
-        n = max(1, -(-total_bytes // max(piece_bytes, 1)))
-        hashes = tuple(_hash(app_id, total_bytes, i) for i in range(n))
-        return cls(app_id, piece_bytes, total_bytes, hashes)
+        materialised (benchmarks use multi-GB images).
+
+        Piece hashes deliberately do NOT fold in the version, so a new
+        revision of the same (app_id, total_bytes) shares hashes with its
+        predecessor except for `changed` pieces — that is what makes the
+        synthetic path a usable delta-distribution workload.
+        """
+        n = (-(-total_bytes // max(piece_bytes, 1))
+             if total_bytes > 0 else 0)
+        changed = changed or set()
+        hashes = tuple(
+            _hash(app_id, total_bytes, i, "rev", version) if i in changed
+            else _hash(app_id, total_bytes, i)
+            for i in range(n))
+        return cls(app_id, piece_bytes, total_bytes, hashes,
+                   version=version,
+                   prev_manifest_hash=prev.manifest_hash
+                   if prev is not None else None)
 
 
 class PieceInventory:
@@ -165,6 +214,35 @@ class PieceInventory:
     def bitfield(self) -> int:
         """Holdings as a compact int bitmask (bit p set <=> piece p held)."""
         return self._mask
+
+    def seed_from(self, prev: "PieceInventory",
+                  read_piece: Optional[Callable[[int], Any]] = None
+                  ) -> Set[int]:
+        """Adopt still-valid pieces from a previous revision's inventory.
+
+        Only pieces that are unchanged per ``manifest.delta(prev)`` AND
+        verified in `prev` are candidates.  The reuse rule: for a
+        content-hashed manifest the actual bytes are re-read through
+        `read_piece(piece_id)` and re-hashed by add(data=...) — a reused
+        piece is never trusted on faith, so a corrupt or stale cache can
+        not leak into the new revision.  Synthetic manifests adopt by
+        proof.  Returns the set of adopted piece ids.
+        """
+        changed = self.manifest.delta(prev.manifest)
+        adopted: Set[int] = set()
+        for pid in prev.have:
+            if pid in changed or pid >= self.manifest.n_pieces:
+                continue
+            if self.manifest.content_hashed:
+                data = read_piece(pid) if read_piece is not None else None
+                if data is None:
+                    continue
+                ok = self.add(pid, data=data)
+            else:
+                ok = self.add(pid, proof=self.manifest.piece_hashes[pid])
+            if ok:
+                adopted.add(pid)
+        return adopted
 
 
 # --------------------------------------------------------------------------- #

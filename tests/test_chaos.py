@@ -356,3 +356,62 @@ if HAVE_HYPOTHESIS:
                            n_parts=16, loss=loss, churn=churn,
                            n_partitions=n_partitions).run()
         sc.check_invariants()
+
+
+# ------- versioned manifests: gossip must never wait on the limiter ----- #
+def test_manifest_update_push_bypasses_seeder_update_limiter():
+    """The SEEDER_UPDATE broadcast is rate-limited (one APP_LIST per
+    push_interval_s) to stop O(N^2) storms; MANIFEST_UPDATE must NOT sit
+    behind that budget — every tick of delay is a window where volunteers
+    serve (and accept) superseded pieces as fresh.  Pins the max added
+    staleness of version gossip at zero."""
+    from repro.core import PieceManifest
+    from repro.core.messages import (APP_LIST, AppInfo, MANIFEST_UPDATE,
+                                     SEEDER_UPDATE)
+    sent = []
+
+    class _RT:
+        t = 0.0
+
+        def now(self):
+            return self.t
+
+        def send(self, dst, msg):
+            sent.append((self.t, dst, msg))
+
+    server = TrackerServer()
+    rt = server.rt = _RT()
+    server.members = {"host", "v1", "v2"}
+    m1 = PieceManifest.synthetic("a", 8_000, 1_000)
+    server.app_list["a"] = AppInfo("a", "host", seeders=("host",),
+                                   manifest=m1)
+    # t=0: a completion spends the one-per-interval broadcast budget
+    server.RECV(Msg(SEEDER_UPDATE, "v1",
+                    {"app_id": "a", "seeder": "v1",
+                     "manifest_hash": m1.manifest_hash}))
+    assert any(m.kind == APP_LIST for _, _, m in sent)
+    # t=0.5 (inside push_interval_s=1.0): a second completion is relayed
+    # but correctly NOT broadcast — the limiter is live
+    rt.t = 0.5
+    n0 = len(sent)
+    server.RECV(Msg(SEEDER_UPDATE, "v2",
+                    {"app_id": "a", "seeder": "v2",
+                     "manifest_hash": m1.manifest_hash}))
+    assert not any(m.kind == APP_LIST for _, _, m in sent[n0:])
+    # t=0.6 (budget still spent): the host publishes v2 — the manifest
+    # relay AND the APP_LIST broadcast go out THIS instant regardless
+    rt.t = 0.6
+    n1 = len(sent)
+    m2 = PieceManifest.synthetic("a", 8_000, 1_000, version=2, prev=m1)
+    server.RECV(Msg(MANIFEST_UPDATE, "host",
+                    {"app_id": "a", "manifest": m2}))
+    new = sent[n1:]
+    relayed = {d for _, d, m in new if m.kind == MANIFEST_UPDATE}
+    assert relayed == {"v1", "v2"}          # old seeders, minus publisher
+    pushes = [(t, d) for t, d, m in new if m.kind == APP_LIST]
+    assert pushes, "MANIFEST_UPDATE was delayed by the push limiter"
+    assert all(t == 0.6 for t, _ in pushes)  # zero added staleness
+    assert {d for _, d in pushes} == server.members
+    # the row snapped to the new revision: seeders reset to the publisher
+    row = server.app_list["a"]
+    assert row.manifest is m2 and row.seeders == ("host",)

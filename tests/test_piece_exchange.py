@@ -13,6 +13,7 @@ from repro.core import (Agent, AgentConfig, LinkModel, Msg, PieceExchange,
 from repro.core.messages import (CHOKE, HAVE, INTERESTED, PIECE_CANCEL,
                                  PIECE_DATA, PIECE_REQ, UNCHOKE)
 from repro.core.runtime import Node
+from repro.core.workunit import PieceInventory
 
 
 # --------------------------- bitmask helpers --------------------------- #
@@ -441,3 +442,152 @@ def test_thread_runtime_periodic_timer_no_drift_under_message_load():
     # deadline-aware dispatch + scheduled-time re-arm keep the 50ms grid:
     # ~24 fires expected; the old drift-per-period loop managed ~17
     assert len(fires) >= 20, f"only {len(fires)} fires: drift under load"
+
+
+# ============ versioned manifests: delta + mixed-version ================ #
+def test_manifest_chain_supersedes_and_delta():
+    img1 = bytes(range(256)) * 16                    # 4096 bytes, 4 pieces
+    m1 = PieceManifest.from_bytes("a", img1, 1024)
+    img2 = bytearray(img1)
+    img2[2048] ^= 0xFF                               # flip a byte in piece 2
+    m2 = PieceManifest.from_bytes("a", bytes(img2), 1024, version=2, prev=m1)
+    assert m2.prev_manifest_hash == m1.manifest_hash
+    assert m2.manifest_hash != m1.manifest_hash      # hash folds the chain
+    assert m2.delta(m1) == {2}
+    assert m2.supersedes(m1) and not m1.supersedes(m2)
+    assert not m1.supersedes(m1)                     # strictly newer only
+    assert m2.supersedes(None)
+    other = PieceManifest.from_bytes("b", img1, 1024, version=9)
+    assert not other.supersedes(m1)                  # different app
+    # incomparable manifests conservatively report everything changed
+    coarse = PieceManifest.from_bytes("a", img1, 2048, version=2, prev=m1)
+    assert coarse.delta(m1) == set(range(coarse.n_pieces))
+    assert m2.delta(None) == {0, 1, 2, 3}
+
+
+def test_manifest_degenerate_empty_and_exact_multiple():
+    # empty image: a 0-piece manifest, trivially complete — no phantom
+    # zero-byte piece that could never transfer or verify
+    empty = PieceManifest.from_bytes("e", b"", 1024)
+    assert empty.n_pieces == 0 and empty.total_bytes == 0
+    assert empty.full_mask == 0
+    assert PieceInventory(empty).complete
+    assert PieceManifest.synthetic("e", 0, 1024).n_pieces == 0
+    e2 = PieceManifest.from_bytes("e", b"", 1024, version=2, prev=empty)
+    assert e2.supersedes(empty) and e2.delta(empty) == set()
+    # exact multiple: no ragged tail piece — the last piece is full-sized
+    # and no empty extra piece is appended
+    img = bytes(4096)
+    exact = PieceManifest.from_bytes("x", img, 1024)
+    assert exact.n_pieces == 4
+    assert [exact.piece_size(i) for i in range(4)] == [1024] * 4
+    syn = PieceManifest.synthetic("x", 4096, 1024)
+    assert syn.n_pieces == 4 and syn.piece_size(3) == 1024
+
+
+def test_upgrade_reuses_unchanged_pieces_and_fetches_delta():
+    img1 = bytes((i * 31 + 7) % 256 for i in range(4096))
+    m1 = PieceManifest.from_bytes("a", img1, 1024)
+    px, log = _engine("S")
+    px.add_local_app("a", m1, image=img1)
+    img2 = bytearray(img1)
+    img2[1030] ^= 0xFF                               # piece 1 changes
+    m2 = PieceManifest.from_bytes("a", bytes(img2), 1024, version=2, prev=m1)
+    assert px.upgrade("a", m2)
+    # the reuse rule carried over every unchanged piece (re-hashed), so
+    # only the delta is left to fetch from the swarm
+    inv = px.inventories["a"]
+    assert inv.have == {0, 2, 3}
+    assert px.reused_pieces == 3
+    assert "a" in px.fetching and "a" not in px.complete
+    # a stale/duplicate publish (not strictly newer) is refused
+    assert not px.upgrade("a", m2)
+    assert not px.upgrade("a", m1)
+    # the missing piece completes the new image through the normal path
+    assert inv.add(1, data=bytes(img2[1024:2048]))
+    assert inv.complete
+
+
+def test_stale_have_is_demoted_not_merged():
+    m2 = PieceManifest.synthetic("a", 8_000, 1_000, version=2)
+    px, log = _engine("S")
+    px.add_local_app("a", m2)
+    # a crash-restarted peer re-announces its full v1 mask after the
+    # swarm moved to v2: it must be demoted, never pooled
+    px.on_have(Msg(HAVE, "P1", {"app_id": "a", "mask": 255, "v": 1}))
+    assert px.stale_have_demoted == 1
+    assert not px.peer_masks.get("a", {}).get("P1", 0)
+    # a peer AHEAD of us stops serving our revision: dropped from the
+    # pool too, but not counted as a demotion
+    px.on_have(Msg(HAVE, "P2", {"app_id": "a", "mask": 255, "v": 3}))
+    assert px.stale_have_demoted == 1
+    assert not px.peer_masks.get("a", {}).get("P2", 0)
+    # the same mask tagged with the current version merges normally
+    px.on_have(Msg(HAVE, "P1", {"app_id": "a", "mask": 255, "v": 2}))
+    assert px.peer_masks["a"]["P1"] == 255
+
+
+def test_stale_piece_req_refused_with_have():
+    m2 = PieceManifest.synthetic("a", 8_000, 1_000, version=2)
+    px, log = _engine("S")
+    px.add_local_app("a", m2)
+    _interested(px, "a", "P0")
+    del log[:]
+    px.on_piece_req(Msg(PIECE_REQ, "P0",
+                        {"app_id": "a", "piece_id": 0, "v": 1}))
+    assert px.stale_reqs_refused == 1
+    # refused with our (version-tagged) HAVE so the straggler learns of
+    # the new revision — never served stale-as-fresh, never banned
+    assert not any(m.kind == PIECE_DATA for _, m in log)
+    sent = [m for d, m in log if d == "P0" and m.kind == HAVE]
+    assert sent and sent[-1].payload["v"] == 2
+    assert "P0" not in px.bad_peers.get("a", set())
+    px.on_piece_req(Msg(PIECE_REQ, "P0",
+                        {"app_id": "a", "piece_id": 0, "v": 2}))
+    assert any(m.kind == PIECE_DATA for _, m in log)
+
+
+def test_stale_piece_data_discarded_without_ban():
+    m1 = PieceManifest.synthetic("a", 8_000, 1_000, version=1)
+    m2 = PieceManifest.synthetic("a", 8_000, 1_000, version=2,
+                                 prev=m1, changed={0})
+    px, log = _engine("L")
+    px.join("a", m2)
+    # piece 0 is the changed piece: its v1 proof is valid ONLY under v1 —
+    # accepting it here is exactly the stale-as-fresh corruption the
+    # version gate exists to stop
+    px.on_piece_data(Msg(PIECE_DATA, "P0",
+                         {"app_id": "a", "piece_id": 0, "v": 1,
+                          "proof": m1.piece_hashes[0]}))
+    assert px.stale_piece_data == 1 and px.stale_accepts == 0
+    assert not px.inventories["a"].has(0)
+    # not a ban: P0 is an honest v1 holder and stays usable once it
+    # upgrades and re-announces under v2
+    assert "P0" not in px.bad_peers.get("a", set())
+    px.on_piece_data(Msg(PIECE_DATA, "P0",
+                         {"app_id": "a", "piece_id": 0, "v": 2,
+                          "proof": m2.piece_hashes[0]}))
+    assert px.inventories["a"].has(0) and px.stale_accepts == 0
+
+
+def test_intern_refcount_bounds_buffers_across_upgrades(monkeypatch):
+    from repro.core import piece_exchange as pe
+    monkeypatch.setattr(pe, "_IMAGE_INTERN_MAX", 2)
+    px, log = _engine("S")
+    img = bytes((i * 13 + 5) % 256 for i in range(8_192))
+    m = PieceManifest.from_bytes("app", img, 1_024)
+    px.add_local_app("app", m, image=img)
+    base = pe.interned_image_count()
+    for v in range(2, 7):                       # five successive upgrades
+        img = bytes((b + 1) % 256 for b in img)
+        m = PieceManifest.from_bytes("app", img, 1_024, version=v, prev=m)
+        assert px.upgrade("app", m, image=img, full=True)
+    # each upgrade released the superseded buffer's reference: the cache
+    # holds the live revision plus at most the bounded LRU dedup tail —
+    # NOT one buffer per revision ever published
+    assert pe.interned_image_count() <= base + 1 + 2
+    live = px._interned["app"]
+    assert live == m.manifest_hash and pe._IMAGE_REFS[live] == 1
+    px.drop_app("app")
+    assert "app" not in px._interned
+    assert live not in pe._IMAGE_REFS

@@ -244,3 +244,57 @@ def test_scenario_vii_batched_large_n_converges():
     assert res["done"] and res["replicated"] and res["replicas"] == 500
     assert res["wall_s"] < 120
     assert res["events_per_sec"] > 500_000
+
+
+# ---------- versioned manifests: (app_id, version) state keying --------- #
+def _hub_engine(node_id, hub, **over):
+    from repro.core import PieceExchange
+    cfg = AgentConfig(**over)
+    px = PieceExchange(node_id, cfg, send=lambda dst, msg: None,
+                       now=lambda: 0.0, tracker_id="server", hub=hub)
+    return px
+
+
+def test_hub_states_keyed_by_version_never_cross_masks():
+    hub = SwarmHub()
+    m1 = PieceManifest.synthetic("a", 8_000, 1_000, version=1)
+    m2 = PieceManifest.synthetic("a", 8_000, 1_000, version=2, prev=m1,
+                                 changed={0})
+    seeder = _hub_engine("S", hub)
+    seeder.add_local_app("a", m1)
+    leech = _hub_engine("L", hub)
+    leech.join("a", m2)
+    # one state per (app_id, version): the v1 seeder's full mask lives in
+    # a different state than the v2 leecher's row — mixed-version swarms
+    # can never merge availability
+    assert set(hub.states) == {("a", 1), ("a", 2)}
+    st2 = hub.states[("a", 2)]
+    assert "S" not in st2.row and int(st2.counts.sum()) == 0
+    assert hub.has_row("a", "S") and hub.has_row("a", "L")
+    # decide_requests for the v2 leecher sees zero holders — it cannot be
+    # steered at the v1 seeder
+    st1 = hub.states[("a", 1)]
+    assert st1.full[st1.row["S"]]
+
+
+def test_hub_retire_detaches_row_and_prunes_empty_state():
+    hub = SwarmHub()
+    m1 = PieceManifest.synthetic("a", 8_000, 1_000, version=1)
+    m2 = PieceManifest.synthetic("a", 8_000, 1_000, version=2, prev=m1,
+                                 changed={0})
+    a = _hub_engine("A", hub)
+    b = _hub_engine("B", hub)
+    a.add_local_app("a", m1)
+    b.add_local_app("a", m1)
+    assert hub.states[("a", 1)].n_alive == 2
+    # A upgrades: its engine retires the v1 row and re-registers under v2
+    # (the synthetic publisher path carries no image bytes)
+    assert a.upgrade("a", m2, full=True)
+    st1 = hub.states[("a", 1)]
+    assert st1.n_alive == 1 and not st1.alive[st1.row["A"]]
+    assert st1.full[st1.row["B"]]                   # only B's claim remains
+    assert set(hub.states) == {("a", 1), ("a", 2)}
+    # the last v1 holder upgrading prunes the superseded state entirely
+    assert b.upgrade("a", m2, full=True)
+    assert set(hub.states) == {("a", 2)}
+    assert hub.states[("a", 2)].n_alive == 2

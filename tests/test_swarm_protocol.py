@@ -244,3 +244,58 @@ def test_uplink_contention_serializes_bulk_only():
     assert at[1] == pytest.approx(2.0, rel=0.01)
     assert at[2] < 0.1
     assert rt.tx_bytes["src"] == 2_000_064
+
+
+# -------------- versioned manifests: tracker-side guards ---------------- #
+def _tracker(members):
+    server = TrackerServer()
+
+    class _RT:
+        def now(self):
+            return 0.0
+
+        def send(self, dst, msg):
+            pass
+    server.rt = _RT()
+    server.members = set(members)
+    return server
+
+
+def test_tracker_write_never_rolls_back_manifest_revision():
+    from repro.core.messages import AppInfo
+    server = _tracker({"h", "s1"})
+    m1 = PieceManifest.synthetic("a", 8_000, 1_000)
+    m2 = PieceManifest.synthetic("a", 8_000, 1_000, version=2, prev=m1)
+    server.WRITE(AppInfo("a", "h", seeders=("h",), manifest=m2))
+    server.app_list["a"].seeders = ("h", "s1")
+    # a stale upsert (a STATUS that raced the upgrade) carries v1: the
+    # row keeps the v2 metainfo and the merged seeder set
+    server.WRITE(AppInfo("a", "h", seeders=("h",), manifest=m1))
+    row = server.app_list["a"]
+    assert row.manifest is m2
+    assert set(row.seeders) == {"h", "s1"}
+    # the host republishing a NEWER revision via plain upsert resets the
+    # seeder set — everyone else holds the superseded image
+    m3 = PieceManifest.synthetic("a", 8_000, 1_000, version=3, prev=m2)
+    server.WRITE(AppInfo("a", "h", seeders=("h",), manifest=m3))
+    row = server.app_list["a"]
+    assert row.manifest is m3 and row.seeders == ("h",)
+
+
+def test_tracker_rejects_stale_revision_completion():
+    from repro.core.messages import AppInfo, Msg, SEEDER_UPDATE
+    server = _tracker({"h", "v1"})
+    m1 = PieceManifest.synthetic("a", 8_000, 1_000)
+    m2 = PieceManifest.synthetic("a", 8_000, 1_000, version=2, prev=m1)
+    server.app_list["a"] = AppInfo("a", "h", seeders=("h",), manifest=m2)
+    # v1 finished the OLD image just as the upgrade landed: admitting it
+    # would route leechers to a node serving superseded pieces
+    server.RECV(Msg(SEEDER_UPDATE, "v1",
+                    {"app_id": "a", "seeder": "v1",
+                     "manifest_hash": m1.manifest_hash}))
+    assert server.app_list["a"].seeders == ("h",)
+    # the same volunteer completing the CURRENT revision is admitted
+    server.RECV(Msg(SEEDER_UPDATE, "v1",
+                    {"app_id": "a", "seeder": "v1",
+                     "manifest_hash": m2.manifest_hash}))
+    assert set(server.app_list["a"].seeders) == {"h", "v1"}
