@@ -54,6 +54,7 @@ def time_pump(px: PieceExchange, iters: int) -> float:
     t0 = time.perf_counter()
     for _ in range(iters):
         px.pending["bench"].clear()
+        px._sole_pending.clear()
         px.peer_load.clear()
         px.pump("bench")
     return (time.perf_counter() - t0) / iters

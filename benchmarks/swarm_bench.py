@@ -306,11 +306,16 @@ def bench_scenario_xi(verbose: bool = True, n_replicas: int = 50,
 
 
 def bench_sweep(ns, verbose: bool = True, backend=None,
-                tick_s: float = 0.5):
+                tick_s: float = 0.5, profile: bool = False):
     """N-sweep of the *batched* array-native Scenario VII: one row per N
     with events/s (logical and heap), wall-clock and peak RSS.  This is
     the scaling curve the batched engine exists for — the per-message
-    path tops out around N≈500 while the hub path reaches N=2000."""
+    path tops out around N≈500 while the hub path (with the ISSUE-10
+    array ledger + fused tick) reaches N=10000.  With `profile`, each
+    row also carries the per-tick wall breakdown: host Python vs kernel
+    milliseconds, drain (message-burst) seconds and the incremental
+    ledger-update count — the numbers that show host time staying
+    sublinear in N."""
     from benchmarks.paper_tables import scenario_vii
     rows = []
     for n in ns:
@@ -336,6 +341,24 @@ def bench_sweep(ns, verbose: bool = True, backend=None,
                          "batch_ops", "coalesced_events", "ticks",
                          "wall_s", "peak_rss_mb", "backend")},
         }
+        if profile:
+            ticks = max(int(res.get("ticks", 0)), 1)
+            tick_w = float(res.get("tick_wall_s", 0.0))
+            kern_w = float(res.get("kernel_wall_s", 0.0))
+            host_ms = (tick_w - kern_w) / ticks * 1e3
+            row["metrics"].update({
+                "tick_wall_s": res.get("tick_wall_s"),
+                "kernel_wall_s": res.get("kernel_wall_s"),
+                "drain_wall_s": res.get("drain_wall_s"),
+                "ledger_ops": res.get("ledger_ops"),
+                "host_ms_per_tick": host_ms,
+                "kernel_ms_per_tick": kern_w / ticks * 1e3,
+            })
+            row["derived"] += (
+                f" | tick {tick_w:.1f}s (host {host_ms:.1f}ms/tick, "
+                f"kernel {kern_w / ticks * 1e3:.1f}ms/tick) drain "
+                f"{res.get('drain_wall_s', 0.0):.1f}s "
+                f"ledger_ops {res.get('ledger_ops')}")
         rows.append(row)
         if verbose:
             print(f"[swarm] {row['name']}: {row['derived']}")
@@ -441,6 +464,10 @@ def main(argv=None) -> None:
     ap.add_argument("--backend", choices=("numpy", "jax", "pallas"),
                     help="kernel backend for --sweep (default: best "
                          "available)")
+    ap.add_argument("--profile", action="store_true",
+                    help="with --sweep: add the per-tick wall breakdown "
+                         "(host vs kernel ms, drain seconds, ledger "
+                         "update counts) to each row")
     ap.add_argument("--scenario-ix", metavar="N,K",
                     help="run ONLY Scenario IX (P4P vs naive) at N "
                          "volunteers over K islands (e.g. 500,8 or the "
@@ -489,7 +516,8 @@ def main(argv=None) -> None:
         return
     if args.sweep:
         ns = [int(x) for x in args.sweep.split(",") if x.strip()]
-        rows = bench_sweep(ns, backend=args.backend)
+        rows = bench_sweep(ns, backend=args.backend,
+                           profile=args.profile)
         if args.json:
             merge_rows(args.json, rows)
             print(f"[swarm] merged {len(rows)} sweep rows "

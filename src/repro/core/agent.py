@@ -371,51 +371,47 @@ class Agent(Node):
 
     def _part_owner(self, app_id: str, part_id: int) -> str:
         """The seeder responsible for a part: the owner of the partition
-        `_partition_pending` assigns it to.  Results for the part converge
+        DIST's grant scan assigns it to.  Results for the part converge
         there so the m_min quorum forms at one place even when endgame
         leases scatter across seeders."""
         seeders = self._seeder_ring(app_id)
         return seeders[part_id % len(seeders)]
 
-    def _partition_pending(self, app: Application,
-                           pending: List[Part]) -> List[Part]:
-        """Split the part space across the current seeder set so concurrent
-        seeders rarely lease the same part; fall back to the full pending
-        list when this seeder's partition is drained (endgame)."""
-        if not app.swarm:
-            return pending
-        seeders = self._seeder_ring(app.app_id)
-        if len(seeders) <= 1:
-            return pending
-        idx = seeders.index(self.node_id)
-        mine = [p for p in pending if p.part_id % len(seeders) == idx]
-        return mine or pending
-
     def DIST(self, volunteer: str, app_id: str) -> None:
-        """Lease the next pending part to `volunteer` and ship app+data."""
+        """Lease the next pending part to `volunteer` and ship app+data.
+
+        The part space is split across the current seeder set so
+        concurrent seeders rarely lease the same part; a seeder whose
+        partition is drained falls back to any pending part (endgame)."""
         app = self._seeded_app(app_id)
         if app is None:
             self.SEND(volunteer, Msg(NO_WORK, self.node_id,
                                      {"app_id": app_id}, size_bytes=64))
             return
         tail = self.tails[app_id]
-        active = tail.active()
-        pending = self._partition_pending(app, app.pending_parts(active))
-        if not pending:
-            self.SEND(volunteer, Msg(NO_WORK, self.node_id,
-                                     {"app_id": app_id}, size_bytes=64))
-            return
+        leased = tail.by_part            # empty lists count as no lease
+        seeders = self._seeder_ring(app_id) if app.swarm else []
+        if len(seeders) > 1:
+            s, me = len(seeders), seeders.index(self.node_id)
+
+            def in_partition(p: Part) -> bool:
+                return p.part_id % s == me
+        else:
+            def in_partition(p: Part) -> bool:
+                return True
+        voted = self.voted
+
         # skip parts this volunteer already contributed to (a result seen
         # or forwarded here, or an active lease): a quorum needs
         # *distinct* voters, and re-granting just burns a duplicate
         # execution or spins a cached-resend loop
-        part = next(
-            (p for p in pending
-             if volunteer not in self.voted.get((app_id, p.part_id), ())
-             and not any(v == volunteer for v, _, _ in p.results)
-             and not any(l.volunteer_id == volunteer
-                         for l in active.get(p.part_id, []))),
-            None)
+        def acceptable(p: Part) -> bool:
+            return (volunteer not in voted.get((app_id, p.part_id), ())
+                    and not any(v == volunteer for v, _, _ in p.results)
+                    and not any(l.volunteer_id == volunteer
+                                for l in leased.get(p.part_id, ())))
+
+        part = app.grant_candidate(leased, in_partition, acceptable)
         if part is None:
             self.SEND(volunteer, Msg(NO_WORK, self.node_id,
                                      {"app_id": app_id}, size_bytes=64))

@@ -270,6 +270,37 @@ class ChaosScenario:
                     assert row_have == set(inv.have), self._fail(
                         f"hub row for {a.node_id} disagrees with its "
                         f"inventory")
+                # the in-flight array ledger (ISSUE 10) must mirror every
+                # live engine's scalar pending dicts entry for entry after
+                # the fault trace; dead/detached rows must be fully swept
+                for name, i in st.row.items():
+                    px_i = st.clients[i]
+                    if px_i is None or not st.alive[i]:
+                        assert int(st.pend_n[i]) == 0 \
+                            and int(st.busy_n[i]) == 0, self._fail(
+                                f"ledger not swept for dead row {name}")
+                        continue
+                    pending = px_i.pending.get(st.app_id, {})
+                    assert int(st.pend_n[i]) == len(pending), self._fail(
+                        f"ledger piece count drift for {name}")
+                    for p, asked in pending.items():
+                        cnt = int(st.pend_cnt[i, p])
+                        assert cnt == len(asked), self._fail(
+                            f"ledger slot count drift {name} piece {p}")
+                        named = {}
+                        for s in range(cnt):
+                            j = int(st.pend_holder[i, p, s])
+                            if j >= 0:
+                                named[st.names[j]] = float(st.pend_t[i, p,
+                                                                     s])
+                        want = {h: float(t) for h, t in asked.items()
+                                if h in st.row}
+                        assert named == want, self._fail(
+                            f"ledger holder drift {name} piece {p}")
+        # version discipline: no engine ever accepted a stale piece
+        for a in survivors + [self.host]:
+            assert a.px.stale_accepts == 0, self._fail(
+                f"{a.node_id} accepted {a.px.stale_accepts} stale pieces")
 
     def report(self) -> dict:
         rt = self.rt

@@ -232,6 +232,10 @@ class PieceExchange:
         self.pending: Dict[str, Dict[int, Dict[str, float]]] = \
             collections.defaultdict(dict)
         self.peer_load: Dict[str, int] = collections.defaultdict(int)
+        # app -> holder -> pieces for which it is the SOLE pending holder
+        # (the only requests a CHOKE must re-route); maintained by the
+        # _req_* funnel so on_choke touches one holder, not the whole set
+        self._sole_pending: Dict[str, Dict[str, Set[int]]] = {}
         # app -> piece -> holders whose request for it went stale
         # (recover()): the re-request prefers an *alternate* holder, so a
         # black-holed link cannot capture a piece's retries forever.
@@ -405,9 +409,7 @@ class PieceExchange:
         upload grants all describe v(k) holdings and must never leak into
         v(k+1) scheduling.  Swarm *membership* (who to announce to) is
         kept — the same nodes are upgrading with us."""
-        for asked in self.pending.pop(app_id, {}).values():
-            for peer in asked:
-                self.peer_load[peer] = max(0, self.peer_load[peer] - 1)
+        self._req_drop_app(app_id)
         self.stalled_holders.pop(app_id, None)
         self.peer_masks.pop(app_id, None)
         self.full_seeders.pop(app_id, None)
@@ -539,9 +541,7 @@ class PieceExchange:
     def drop_app(self, app_id: str, keep_image: bool = False) -> None:
         """Forget an app (STOP).  `keep_image` preserves the manifest and
         payload for apps this node still seeds as origin."""
-        for asked in self.pending.pop(app_id, {}).values():
-            for peer in asked:
-                self.peer_load[peer] = max(0, self.peer_load[peer] - 1)
+        self._req_drop_app(app_id)
         self.fetching.discard(app_id)
         self.inventories.pop(app_id, None)
         self.stalled_holders.pop(app_id, None)
@@ -605,14 +605,14 @@ class PieceExchange:
         for queued in self.queued_reqs.values():
             queued.pop(node, None)
         self.peer_load.pop(node, None)
-        for app_id, pending in self.pending.items():
-            dirty = False
-            for piece, asked in list(pending.items()):
-                if asked.pop(node, None) is not None:
-                    dirty = True
-                if not asked:
-                    del pending[piece]
-            if dirty:
+        for app_id in list(self.pending):
+            pending = self.pending[app_id]
+            stranded = [p for p, asked in pending.items() if node in asked]
+            for piece in stranded:
+                # the load counter is already gone wholesale (popped
+                # above): don't let the decrement resurrect it at 0
+                self._req_del(app_id, piece, node, dec_load=False)
+            if stranded:
                 self.pump(app_id)
 
     # ====================== queries for the agent ======================= #
@@ -786,6 +786,100 @@ class PieceExchange:
             self.send(peer, Msg(INTERESTED, self.node_id,
                                 {"app_id": app_id}, size_bytes=64))
 
+    # ===================== pending-request funnel ======================= #
+    # Every mutation of the `pending` dicts goes through the four helpers
+    # below.  They keep three things consistent in one place: the
+    # per-holder load counters, the sole-pending-by-holder index that
+    # on_choke re-routes from, and (hub mode) the batched engine's
+    # array-native request ledger.
+
+    def _sole_del(self, app_id: str, peer: str, piece_id: int) -> None:
+        sp = self._sole_pending.get(app_id)
+        held = sp.get(peer) if sp else None
+        if held is not None:
+            held.discard(piece_id)
+            if not held:
+                del sp[peer]
+
+    def _req_add(self, app_id: str, piece_id: int, peer: str,
+                 now: float) -> None:
+        """Record an issued request (`peer` is not yet asked for the
+        piece — pump/endgame guarantee that)."""
+        pending = self.pending[app_id]
+        asked = pending.get(piece_id)
+        if asked is None:
+            pending[piece_id] = {peer: now}
+            self._sole_pending.setdefault(app_id, {}) \
+                .setdefault(peer, set()).add(piece_id)
+        else:
+            if len(asked) == 1:
+                # an endgame duplicate: the previous holder stops being
+                # the sole one on the hook for this piece
+                self._sole_del(app_id, next(iter(asked)), piece_id)
+            asked[peer] = now
+        self.peer_load[peer] += 1
+        if self.hub is not None:
+            self.hub.ledger_add(self, app_id, piece_id, peer, now)
+
+    def _req_del(self, app_id: str, piece_id: int, peer: str,
+                 dec_load: bool = True) -> bool:
+        """Withdraw one (piece, holder) entry; True when it existed.
+        `dec_load=False` for peers whose load counter was already
+        dropped wholesale (on_peer_gone pops it first)."""
+        pending = self.pending.get(app_id)
+        asked = pending.get(piece_id) if pending else None
+        if asked is None or peer not in asked:
+            return False
+        del asked[peer]
+        if dec_load:
+            self.peer_load[peer] = max(0, self.peer_load[peer] - 1)
+        self._sole_del(app_id, peer, piece_id)
+        if not asked:
+            del pending[piece_id]
+        elif len(asked) == 1:
+            self._sole_pending.setdefault(app_id, {}) \
+                .setdefault(next(iter(asked)), set()).add(piece_id)
+        if self.hub is not None:
+            self.hub.ledger_del(self, app_id, piece_id, peer)
+        return True
+
+    def _req_clear(self, app_id: str,
+                   piece_id: int) -> Optional[Dict[str, float]]:
+        """Drop a piece's whole pending entry (reconcile: the piece
+        verified).  Returns the removed holder->asked_at dict so the
+        caller can PIECE_CANCEL the losers."""
+        pending = self.pending.get(app_id)
+        asked = pending.pop(piece_id, None) if pending else None
+        if not asked:
+            return asked
+        for holder in asked:
+            self.peer_load[holder] = max(0, self.peer_load[holder] - 1)
+            self._sole_del(app_id, holder, piece_id)
+        if self.hub is not None:
+            self.hub.ledger_clear(self, app_id, piece_id)
+        return asked
+
+    def _req_drop_app(self, app_id: str) -> None:
+        """Forget every in-flight request for the app (STOP / revision
+        reset)."""
+        for asked in self.pending.pop(app_id, {}).values():
+            for peer in asked:
+                self.peer_load[peer] = max(0, self.peer_load[peer] - 1)
+        self._sole_pending.pop(app_id, None)
+        if self.hub is not None:
+            self.hub.ledger_drop(self, app_id)
+
+    def _route_choked(self, app_id: str, peer: str) -> None:
+        """A CHOKE from `peer`: re-route the requests solely pending at
+        it (endgame duplicates stay queued at the holder; a sole request
+        must move elsewhere or the piece stalls).  The holder index makes
+        this O(requests at peer), not O(whole pending set)."""
+        held = self._sole_pending.get(app_id, {}).get(peer)
+        if not held:
+            return
+        for piece_id in sorted(held):
+            self._req_del(app_id, piece_id, peer)
+
     def pump(self, app_id: str) -> None:
         """Issue PIECE_REQs, rarest-first, to the least-loaded unchoked
         holders; fall into endgame when everything missing is in flight.
@@ -845,10 +939,9 @@ class PieceExchange:
                     peer = min(cands, key=lambda h: (
                         h in shun, self._peer_cost(h),
                         self.peer_load.get(h, 0), h))
-                    pending[piece_id] = {peer: now}
+                    self._req_add(app_id, piece_id, peer, now)
                     usable.discard(peer)
                     usable_full.discard(peer)
-                    self.peer_load[peer] += 1
                     self._send_req(app_id, piece_id, peer)
         # endgame only once real progress exists AND everything still
         # missing is already in flight: duplicating the very first
@@ -883,9 +976,8 @@ class PieceExchange:
             if not holders:
                 continue
             peer = min(holders, key=lambda h: (self.peer_load.get(h, 0), h))
-            pending[piece_id] = {peer: now}
+            self._req_add(app_id, piece_id, peer, now)
             busy.add(peer)
-            self.peer_load[peer] += 1
             self._send_req(app_id, piece_id, peer)
         if (self.cfg.endgame and pending and inv.have and not
                 [p for p in inv.missing() if p not in pending]):
@@ -929,8 +1021,7 @@ class PieceExchange:
             for holder in holders:
                 if holder in asked or holder in shun:
                     continue
-                asked[holder] = now
-                self.peer_load[holder] += 1
+                self._req_add(app_id, piece_id, holder, now)
                 self._send_req(app_id, piece_id, holder, endgame=True)
                 if len(asked) >= cap:
                     break
@@ -992,6 +1083,23 @@ class PieceExchange:
             # grow-only merge already does the right thing
             return self._note_peer_mask(app_id, peer, mask)
         new = mask & manifest.full_mask
+        if new != manifest.full_mask \
+                and peer in self.full_seeders.get(app_id, ()):
+            # demote BEFORE the no-change early return: the peer itself
+            # says it no longer holds everything.  A stale tracker row
+            # (APP_LIST re-pushes the old seeder set every refresh) can
+            # re-promote a crash-restarted seeder between two identical
+            # snapshots — without re-demoting here, endgame re-requests
+            # live-lock against the phantom seeder (REQ -> "don't have
+            # it" HAVE -> re-route -> _holders offers it again via
+            # full_seeders -> REQ ...) at link latency, and the heap
+            # grows without sim time advancing.
+            self.full_seeders[app_id].discard(peer)
+            if not new and not old:
+                # it was in the holder pool only as a seeder
+                self._pool_changed(app_id)
+            if new == old:
+                return True          # availability changed: full -> partial
         if new == old:
             return False
         masks[peer] = new
@@ -1013,11 +1121,6 @@ class PieceExchange:
             self._pool_changed(app_id)
         if new == manifest.full_mask:
             self._promote_full_seeder(app_id, peer)
-        elif peer in self.full_seeders.get(app_id, ()):
-            # demote: the peer itself says it no longer holds everything.
-            # Pool membership is unchanged — it still holds pieces (a
-            # shrink to nothing took the new == 0 branch above).
-            self.full_seeders[app_id].discard(peer)
         return True
 
     def _drop_peer_pending(self, app_id: str, peer: str) -> bool:
@@ -1028,12 +1131,9 @@ class PieceExchange:
         if not pending:
             return False
         dropped = False
-        for piece_id, asked in list(pending.items()):
-            if asked.pop(peer, None) is not None:
-                self.peer_load[peer] = max(0, self.peer_load[peer] - 1)
-                dropped = True
-                if not asked:
-                    del pending[piece_id]
+        for piece_id in [p for p, asked in pending.items() if peer in asked]:
+            self._req_del(app_id, piece_id, peer)
+            dropped = True
         return dropped
 
     def _promote_full_seeder(self, app_id: str, peer: str) -> None:
@@ -1108,13 +1208,10 @@ class PieceExchange:
         rerouted = False
         if pending:
             known = self.peer_masks[app_id].get(peer, 0)
-            for piece_id, asked in list(pending.items()):
-                if peer in asked and not (known >> piece_id) & 1:
-                    del asked[peer]
-                    self.peer_load[peer] = max(0, self.peer_load[peer] - 1)
-                    rerouted = True
-                    if not asked:
-                        del pending[piece_id]
+            for piece_id in [p for p, asked in pending.items()
+                             if peer in asked and not (known >> p) & 1]:
+                self._req_del(app_id, piece_id, peer)
+                rerouted = True
         # a HAVE that changed nothing cannot change pump's decision either
         if (changed or rerouted) and app_id in self.fetching:
             self.pump(app_id)
@@ -1236,14 +1333,7 @@ class PieceExchange:
         peer = msg.src
         self.unchoked_by[app_id].discard(peer)
         # re-route outstanding requests parked at the choking holder
-        pending = self.pending[app_id]
-        for piece_id, asked in list(pending.items()):
-            if peer in asked and len(asked) == 1:
-                # endgame duplicates stay queued at the holder; a sole
-                # request must move elsewhere or the piece stalls
-                del asked[peer]
-                self.peer_load[peer] = max(0, self.peer_load[peer] - 1)
-                del pending[piece_id]
+        self._route_choked(app_id, peer)
         if app_id in self.fetching:
             self.pump(app_id)
 
@@ -1344,16 +1434,10 @@ class PieceExchange:
                 self.pump(app_id)
             return
         self._note_peer_mask(app_id, peer, msg.payload.get("mask"))
-        pending = self.pending[app_id]
-        asked = pending.get(piece_id)
-        if asked is not None and peer in asked:
-            del asked[peer]
-            self.peer_load[peer] = max(0, self.peer_load[peer] - 1)
-            if not asked:
-                # last outstanding request for the piece answered: the
-                # piece must re-enter `missing` (pump skips pending keys),
-                # or a corrupt reply would stall it until recover()
-                del pending[piece_id]
+        # answered: drop the in-flight entry (when it was the last holder
+        # the piece re-enters `missing`, so a corrupt reply cannot stall
+        # it until recover())
+        self._req_del(app_id, piece_id, peer)
         inv = self.inventories.get(app_id)
         if inv is None or inv.complete or inv.has(piece_id):
             if inv is not None:
@@ -1418,11 +1502,10 @@ class PieceExchange:
             stalled.pop(piece_id, None)      # decided: forget stale history
         if self.hub is not None:
             self.hub.mark_dirty(self, app_id)
-        asked = self.pending[app_id].pop(piece_id, None)
+        asked = self._req_clear(app_id, piece_id)
         if not asked:
             return
         for holder in sorted(asked):
-            self.peer_load[holder] = max(0, self.peer_load[holder] - 1)
             self.cancels_sent += 1
             self.send(holder, Msg(PIECE_CANCEL, self.node_id,
                                   {"app_id": app_id, "piece_id": piece_id},
@@ -1465,23 +1548,20 @@ class PieceExchange:
         now = self.now()
         pending = self.pending.get(app_id, {})
         for piece_id, asked in list(pending.items()):
-            for peer, t in list(asked.items()):
-                if now - t > stall_s:
-                    del asked[peer]
-                    self.peer_load[peer] = max(0, self.peer_load[peer] - 1)
-                    # shun the silent holder for this piece so the
-                    # re-request pump issues goes to an alternate one
-                    self.stalled_holders.setdefault(app_id, {}) \
-                        .setdefault(piece_id, set()).add(peer)
-                    # the holder may have the request parked in its choke
-                    # queue (endgame): withdraw it, or it inflates the
-                    # load the holder reports to the tracker forever
-                    self.send(peer, Msg(PIECE_CANCEL, self.node_id,
-                                        {"app_id": app_id,
-                                         "piece_id": piece_id},
-                                        size_bytes=64))
-            if not asked:
-                del pending[piece_id]
+            stale = [peer for peer, t in asked.items() if now - t > stall_s]
+            for peer in stale:
+                self._req_del(app_id, piece_id, peer)
+                # shun the silent holder for this piece so the
+                # re-request pump issues goes to an alternate one
+                self.stalled_holders.setdefault(app_id, {}) \
+                    .setdefault(piece_id, set()).add(peer)
+                # the holder may have the request parked in its choke
+                # queue (endgame): withdraw it, or it inflates the
+                # load the holder reports to the tracker forever
+                self.send(peer, Msg(PIECE_CANCEL, self.node_id,
+                                    {"app_id": app_id,
+                                     "piece_id": piece_id},
+                                    size_bytes=64))
         # allow a fresh INTERESTED round toward holders that never answered
         if (self.hub is None and app_id in self.fetching
                 and not self.unchoked_by[app_id]):

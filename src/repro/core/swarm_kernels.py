@@ -51,6 +51,11 @@ except Exception:  # pragma: no cover - exercised on the no-jax CI image
 # larger than any real composite key so they argsort to the back
 KEY_INF = np.int64(2 ** 62)
 
+# int32-safe sentinel for the fused request-matching / endgame top-k
+# kernels (the jax backend runs without x64): holder keys there are
+# cost * 2^20 + rank < 2^27, so 2^30 is strictly above any real key
+KEY_INF32 = np.int32(2 ** 30)
+
 _backend = os.environ.get("REPRO_SWARM_BACKEND", "numpy")
 
 
@@ -375,6 +380,266 @@ def choke_order(recv: np.ndarray, sent: np.ndarray, cand: np.ndarray,
                            jnp.asarray(np.asarray(sent, dtype=np.float32)),
                            jnp.asarray(np.asarray(cand, dtype=bool)),
                            jnp.asarray(np.asarray(ranks, dtype=np.int32)))
+    return np.asarray(out, dtype=np.int32)
+
+
+# ==================== fused request matching ============================ #
+# The array-native ledger (ISSUE 10) lets the hub's pump stage stop
+# walking per-node dicts: every selected row's holder choice becomes one
+# greedy walk over its piece order, executed for ALL rows as a loop over
+# order POSITIONS (at most P vectorized steps, independent of N — the
+# "host time sublinear in N" property).  Each step k picks, for every
+# still-active row, the lowest-keyed usable candidate holding that row's
+# k-th rarest piece, marks the holder busy (one in-flight request per
+# holder) and burns one pipeline-budget unit — exactly the scalar
+# `_match_row` walk.
+#
+# Keys are the int32-safe encoding ``cost * 2^20 + rank`` (< 2^27): it
+# orders identically to the scalar engine's ``rank + cost * 2^32`` —
+# both are the lexicographic (cost, rank) order, since rank < 2^20 —
+# but fits the x64-less jax backend.  Rows with shunned or banned
+# holders stay on the scalar `_match_row` slow path, so the kernel never
+# needs the shun plane.
+
+def match_requests_np(orders: np.ndarray, n_walk: np.ndarray,
+                      budgets: np.ndarray, cand: np.ndarray,
+                      cand_ok: np.ndarray, cand_key: np.ndarray,
+                      have: np.ndarray, full: np.ndarray) -> np.ndarray:
+    """Greedy holder-match for many rows at once.
+
+    ``orders``   — (R, P) int piece ids, each row's request order;
+    ``n_walk``   — (R,) how many order positions row r may walk
+                   (its missing-piece count);
+    ``budgets``  — (R,) pipeline budget (requests row r may issue);
+    ``cand``     — (R, C) int32 candidate holder rows, -1 padded;
+    ``cand_ok``  — (R, C) bool: candidate is usable (valid, alive,
+                   holder-ish, not self, not already busy for the row);
+    ``cand_key`` — (R, C) int32 preference key, lower wins
+                   (``cost * 2^20 + name_rank``);
+    ``have``     — (N, P) bool piece-holding matrix; ``full`` — (N,) bool.
+
+    Returns (R, P) int32 picks: ``picks[r, k]`` is the holder row chosen
+    for piece ``orders[r, k]``, or -1.  A row stops when its budget is
+    exhausted, its walk ends, or all its candidates are busy.
+    """
+    orders = np.asarray(orders)
+    R, P = orders.shape
+    picks = np.full((R, P), -1, dtype=np.int32)
+    C = cand.shape[1] if cand.ndim == 2 else 0
+    if R == 0 or C == 0:
+        return picks
+    safe = np.where(cand >= 0, cand, 0)
+    hv = np.asarray(have, dtype=bool)[safe] \
+        | np.asarray(full, dtype=bool)[safe][:, :, None]     # (R, C, P)
+    taken = ~np.asarray(cand_ok, dtype=bool)
+    budget = np.asarray(budgets, dtype=np.int64).copy()
+    walk = np.asarray(n_walk, dtype=np.int64)
+    key = np.asarray(cand_key, dtype=np.int64)
+    ridx = np.arange(R)
+    kmax = int(min(max(int(walk.max(initial=0)), 0), P))
+    for k in range(kmax):
+        act = (budget > 0) & (k < walk) & ~taken.all(axis=1)
+        if not act.any():
+            break
+        p = orders[:, k].astype(np.int64)
+        okk = ~taken & hv[ridx, :, p] & act[:, None]         # (R, C)
+        sel = okk.any(axis=1)
+        c = np.argmin(np.where(okk, key, np.int64(KEY_INF32)), axis=1)
+        picks[sel, k] = cand[sel, c[sel]]
+        taken[sel, c[sel]] = True
+        budget[sel] -= 1
+    return picks
+
+
+if _HAVE_JAX:
+    @jax.jit
+    def _match_requests_jax(orders, n_walk, budgets, cand, cand_ok,
+                            cand_key, have, full):
+        R, P = orders.shape
+        safe = jnp.where(cand >= 0, cand, 0)
+        hv = have[safe] | full[safe][:, :, None]             # (R, C, P)
+        inf = jnp.int32(KEY_INF32)
+        key0 = jnp.where(cand_ok, cand_key.astype(jnp.int32), inf)
+        ridx = jnp.arange(R)
+
+        def body(k, carry):
+            picks, taken, budget = carry
+            act = (budget > 0) & (k < n_walk) & ~jnp.all(taken, axis=1)
+            p = orders[:, k]
+            col = jnp.take_along_axis(
+                hv, p[:, None, None], axis=2)[:, :, 0]       # (R, C)
+            okk = ~taken & col & act[:, None]
+            sel = okk.any(axis=1)
+            c = jnp.argmin(jnp.where(okk, key0, inf), axis=1)
+            val = jnp.take_along_axis(cand, c[:, None], axis=1)[:, 0]
+            picks = picks.at[:, k].set(
+                jnp.where(sel, val, picks[:, k]))
+            taken = taken.at[ridx, c].set(taken[ridx, c] | sel)
+            budget = budget - sel.astype(budget.dtype)
+            return picks, taken, budget
+
+        picks0 = jnp.full((R, P), -1, dtype=jnp.int32)
+        picks, _, _ = jax.lax.fori_loop(
+            0, P, body,
+            (picks0, ~cand_ok, budgets.astype(jnp.int32)))
+        return picks
+
+    def _match_requests_pallas(orders, n_walk, budgets, cand, cand_ok,
+                               cand_key, have, full,
+                               interpret: bool = True):
+        """Pallas request-matching kernel: one grid program per row walks
+        that row's piece order with the (candidate-availability, key,
+        busy-mask) state resident in the program — the per-row greedy
+        inner loop the numpy/jax paths vectorize across rows."""
+        import jax.experimental.pallas as pl
+
+        R, P = orders.shape
+        C = cand.shape[1]
+        safe = jnp.where(cand >= 0, cand, 0)
+        hv = (have[safe] | full[safe][:, :, None]).astype(jnp.int32)
+        inf = int(KEY_INF32)  # plain int: pallas kernels can't capture arrays
+
+        def kernel(ord_ref, walk_ref, bud_ref, cand_ref, ok_ref,
+                   key_ref, hv_ref, out_ref):
+            order = ord_ref[...]                             # (1, P)
+            okrow = ok_ref[...][0] != 0                      # (C,)
+            keyrow = jnp.where(okrow, key_ref[...][0], inf)  # (C,)
+            hvrow = hv_ref[...][0]                           # (C, P)
+            candrow = cand_ref[...][0]                       # (C,)
+            walk = walk_ref[...][0, 0]
+
+            def body(k, carry):
+                out, taken, bud = carry
+                act = (bud > 0) & (k < walk) & jnp.any(~taken)
+                p = order[0, k]
+                col = jax.lax.dynamic_index_in_dim(
+                    hvrow, p, axis=1, keepdims=False)        # (C,)
+                okk = ~taken & (col != 0) & act
+                sel = jnp.any(okk)
+                c = jnp.argmin(jnp.where(okk, keyrow, inf))
+                out = out.at[0, k].set(
+                    jnp.where(sel, candrow[c], out[0, k]))
+                taken = taken.at[c].set(taken[c] | sel)
+                bud = bud - sel.astype(bud.dtype)
+                return out, taken, bud
+
+            init = (jnp.full((1, P), -1, dtype=jnp.int32),
+                    ~okrow, bud_ref[...][0, 0])
+            out, _, _ = jax.lax.fori_loop(0, P, body, init)
+            out_ref[...] = out
+
+        return pl.pallas_call(
+            kernel,
+            grid=(R,),
+            in_specs=[
+                pl.BlockSpec((1, P), lambda i: (i, 0)),
+                pl.BlockSpec((1, 1), lambda i: (i, 0)),
+                pl.BlockSpec((1, 1), lambda i: (i, 0)),
+                pl.BlockSpec((1, C), lambda i: (i, 0)),
+                pl.BlockSpec((1, C), lambda i: (i, 0)),
+                pl.BlockSpec((1, C), lambda i: (i, 0)),
+                pl.BlockSpec((1, C, P), lambda i: (i, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, P), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((R, P), jnp.int32),
+            interpret=interpret,
+        )(orders.astype(jnp.int32),
+          n_walk.astype(jnp.int32)[:, None],
+          budgets.astype(jnp.int32)[:, None],
+          cand.astype(jnp.int32),
+          cand_ok.astype(jnp.int32),
+          cand_key.astype(jnp.int32),
+          hv)
+
+
+def match_requests(orders: np.ndarray, n_walk: np.ndarray,
+                   budgets: np.ndarray, cand: np.ndarray,
+                   cand_ok: np.ndarray, cand_key: np.ndarray,
+                   have: np.ndarray, full: np.ndarray,
+                   backend: Optional[str] = None) -> np.ndarray:
+    b = get_backend(backend)
+    if b == "numpy" or np.asarray(orders).shape[0] == 0 \
+            or cand.shape[1] == 0:
+        return match_requests_np(orders, n_walk, budgets, cand,
+                                 cand_ok, cand_key, have, full)
+    oj = jnp.asarray(np.asarray(orders, dtype=np.int32))
+    wj = jnp.asarray(np.asarray(n_walk, dtype=np.int32))
+    bj = jnp.asarray(np.asarray(budgets, dtype=np.int32))
+    cj = jnp.asarray(np.asarray(cand, dtype=np.int32))
+    okj = jnp.asarray(np.asarray(cand_ok, dtype=bool))
+    kj = jnp.asarray(np.asarray(cand_key, dtype=np.int32))
+    hj = jnp.asarray(np.asarray(have, dtype=bool))
+    fj = jnp.asarray(np.asarray(full, dtype=bool))
+    if b == "pallas":
+        out = _match_requests_pallas(oj, wj, bj, cj, okj, kj, hj, fj)
+    else:
+        out = _match_requests_jax(oj, wj, bj, cj, okj, kj, hj, fj)
+    return np.asarray(out, dtype=np.int32)
+
+
+# ===================== endgame holder top-k ============================= #
+# The fused endgame stage ranks, per piece, the K cheapest eligible
+# holders once per tick, then every endgame row selects its duplicate
+# targets from that shared shortlist with pure array ops.  K =
+# 2 * endgame_cap + 1 guarantees the shortlist is never exhausted: a row
+# excludes at most endgame_cap already-asked holders plus itself, and
+# needs at most endgame_cap picks — so whenever more eligible holders
+# exist than the shortlist shows, the shortlist still covers the need.
+
+def holder_topk_np(keys: np.ndarray, k: int) -> np.ndarray:
+    """(K, P) int32 row indices of the K smallest keys per column.
+
+    ``keys`` is (N, P); invalid holders carry KEY_INF32.  Output entries
+    whose key is KEY_INF32 (or beyond N) are -1.  Ordered by ascending
+    key; keys are unique per column among valid holders (they embed the
+    unique name rank), so the result is deterministic.
+    """
+    keys = np.asarray(keys)
+    n, p = keys.shape
+    kk = min(int(k), n)
+    if kk <= 0 or p == 0:
+        return np.full((max(int(k), 0), p), -1, dtype=np.int32)
+    if kk < n:
+        part = np.argpartition(keys, kk - 1, axis=0)[:kk]
+    else:
+        part = np.tile(np.arange(n)[:, None], (1, p))
+    vals = np.take_along_axis(keys, part, axis=0)
+    order = np.argsort(vals, axis=0, kind="stable")
+    top = np.take_along_axis(part, order, axis=0)
+    tv = np.take_along_axis(keys, top, axis=0)
+    out = np.where(tv < np.int64(KEY_INF32), top, -1).astype(np.int32)
+    if kk < int(k):
+        pad = np.full((int(k) - kk, p), -1, dtype=np.int32)
+        out = np.concatenate([out, pad], axis=0)
+    return out
+
+
+if _HAVE_JAX:
+    from functools import partial as _partial
+
+    @_partial(jax.jit, static_argnames=("k",))
+    def _holder_topk_jax(keys, k: int):
+        n, p = keys.shape
+        kk = min(int(k), n)
+        # top_k takes the LARGEST along the last axis; negate + transpose
+        vals, idx = jax.lax.top_k(-keys.astype(jnp.int32).T, kk)
+        valid = -vals < jnp.int32(KEY_INF32)
+        out = jnp.where(valid, idx, -1).astype(jnp.int32).T   # (kk, P)
+        if kk < int(k):
+            pad = jnp.full((int(k) - kk, p), -1, dtype=jnp.int32)
+            out = jnp.concatenate([out, pad], axis=0)
+        return out
+
+
+def holder_topk(keys: np.ndarray, k: int,
+                backend: Optional[str] = None) -> np.ndarray:
+    b = get_backend(backend)
+    if b == "numpy":
+        return holder_topk_np(keys, k)
+    # the pallas backend shares the jax path (same discipline as
+    # choke_order: selection/sort primitives stay in XLA)
+    out = _holder_topk_jax(
+        jnp.asarray(np.asarray(keys, dtype=np.int32)), int(k))
     return np.asarray(out, dtype=np.int32)
 
 

@@ -18,6 +18,7 @@ from __future__ import annotations
 import functools
 import hashlib
 import itertools
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
@@ -308,6 +309,8 @@ class Application:
     # of these bytes and the manifest hashes their content; when None the
     # image is synthetic (simulation) and pieces move as hash proofs
     image: Optional[bytes] = None
+    # lazy open-part index (see _open); not part of the public state
+    _open_idx: Optional["deque"] = field(default=None, repr=False)
 
     def ensure_manifest(self) -> PieceManifest:
         if self.manifest is None:
@@ -339,20 +342,85 @@ class Application:
                 image=self.image)
         return make
 
+    def _open(self) -> "deque":
+        """Positions of not-yet-done parts.  Built lazily, pruned as a
+        side effect of every scan, so the per-DIST cost tracks the open
+        part count instead of the full part list (`done` flips are
+        monotonic; entries completed since the last scan self-heal out
+        no matter who set the flag).  A deque so scans can rotate: the
+        next grant resumes where the last one stopped instead of
+        re-walking every currently-leased part at the front."""
+        idx = self._open_idx
+        if idx is None:
+            idx = self._open_idx = deque(
+                k for k, p in enumerate(self.parts) if not p.done)
+        return idx
+
     def pending_parts(self, leased: Dict[int, list]) -> List[Part]:
         out = []
-        for part in self.parts:
+        idx = self._open()
+        for _ in range(len(idx)):
+            k = idx[0]
+            part = self.parts[k]
             if part.done:
+                idx.popleft()             # prune completed entries
                 continue
+            idx.rotate(-1)
             active = len(leased.get(part.part_id, []))
             needed = self.m_min - len(part.results) - active
             if needed > 0:
                 out.append(part)
         return out
 
+    def grant_candidate(self, leased: Dict[int, list],
+                        in_partition: Callable[["Part"], bool],
+                        acceptable: Callable[["Part"], bool]
+                        ) -> Optional[Part]:
+        """Next pending part in this seeder's partition that
+        `acceptable` admits; when the partition holds no pending part at
+        all, an acceptable pending part anywhere (the endgame fallback:
+        a seeder whose partition drained helps finish the rest).
+
+        Round-robin over the open-part index: every examined entry
+        rotates to the back (done entries prune out instead), so the
+        scan resumes after the previously granted part and the per-DIST
+        cost is the distance to the next grantable part — NOT a re-walk
+        of the O(active leases) saturated prefix that a front-first scan
+        pays at N=10000 (the fallback still needs the one full cycle it
+        always needed)."""
+        idx = self._open()
+        any_mine = False
+        best_any = None
+        for _ in range(len(idx)):
+            k = idx[0]
+            part = self.parts[k]
+            if part.done:
+                idx.popleft()             # prune completed entries
+                continue
+            idx.rotate(-1)
+            active = len(leased.get(part.part_id, ()))
+            if self.m_min - len(part.results) - active <= 0:
+                continue
+            if in_partition(part):
+                any_mine = True
+                if acceptable(part):
+                    return part
+            elif best_any is None and acceptable(part):
+                best_any = part
+        return None if any_mine else best_any
+
     @property
     def done(self) -> bool:
-        return all(p.done for p in self.parts)
+        # pop completed entries off the index tail until a live one is
+        # found: each entry is discarded at most once across the app's
+        # lifetime, so the check is amortized O(1) instead of a rescan
+        idx = self._open()
+        while idx:
+            if self.parts[idx[-1]].done:
+                idx.pop()
+            else:
+                return False
+        return True
 
     @property
     def total_data_bytes(self) -> int:

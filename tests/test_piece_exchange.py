@@ -285,6 +285,36 @@ def test_corrupt_piece_rerouted_to_other_holder_immediately():
     assert [d for d, _ in reqs] == ["A", "B"]
 
 
+def test_phantom_full_seeder_demoted_on_unchanged_snapshot():
+    """Live-lock regression (scenario-x chaos overlay, hash-seed
+    dependent): a crash-restarted seeder the tracker still advertises
+    keeps refusing re-requests with an authoritative HAVE identical to
+    the mask we already recorded.  The no-change early return in
+    `_sync_peer_mask` used to skip the full-seeder demote, so `_holders`
+    kept offering the phantom seeder and the REQ -> "don't have it" HAVE
+    -> re-route -> REQ cycle spun at link latency while the heap grew."""
+    px, log = _engine("L")
+    m = PieceManifest.synthetic("a", 1_000, 1_000)       # one piece
+    px.join("a", m)
+    px.note_full_seeders("a", {"A"})                     # stale tracker row
+    px.unchoked_by["a"].add("A")
+    px.pump("a")
+    assert [d for d, msg in log if msg.kind == PIECE_REQ] == ["A"]
+    # A restarted empty: an authoritative snapshot (direct HAVE, no relay
+    # hop) says it holds nothing — first contact records mask 0, and the
+    # re-route still re-asks A because full_seeders vouches for it
+    px.on_have(Msg(HAVE, "A", {"app_id": "a", "mask": 0, "v": m.version}))
+    px.note_full_seeders("a", {"A"})                     # tracker re-push
+    n_reqs = sum(1 for _, msg in log if msg.kind == PIECE_REQ)
+    # the identical snapshot again: the demote must fire even though the
+    # mask did not change, breaking the cycle on the second bounce
+    px.on_have(Msg(HAVE, "A", {"app_id": "a", "mask": 0, "v": m.version}))
+    assert "A" not in px.full_seeders["a"]
+    assert px._holders("a", 0) == []
+    assert sum(1 for _, msg in log if msg.kind == PIECE_REQ) == n_reqs
+    assert 0 not in px.pending.get("a", {})
+
+
 def test_recover_rerequests_stale_piece_from_alternate_holder():
     """The pending staleness sweep: a PIECE_DATA that never arrives is
     withdrawn after `stall_s` (PIECE_CANCEL to the silent holder, load
